@@ -1,0 +1,48 @@
+"""Kernel microbenchmark: fused Pallas message update vs pure-jnp reference.
+
+Wall time on CPU (interpret mode) is not the TPU story; the meaningful
+numbers are the HLO cost-analysis FLOPs/bytes of one BP round for each path,
+which feed the BP roofline in EXPERIMENTS.md. Both are reported."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import messages as M
+from repro.kernels.ops import pallas_update
+from repro.pgm import ising_grid, protein_like_graph
+
+from benchmarks.common import emit
+
+
+def _cost(fn, *args):
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    return c.get("flops", 0.0), (c.get("bytes accessed", 0.0) or
+                                 sum(v for k, v in c.items()
+                                     if k.startswith("bytes accessed")))
+
+
+def run(full: bool = False, n_graphs: int = 1) -> None:
+    for name, pgm in [("ising40_S2", ising_grid(40, 2.5)),
+                      ("protein100_S~64", protein_like_graph(100, seed=1))]:
+        logm = M.init_messages(pgm)
+        for path, fn in [("ref", M.ref_update),
+                         ("pallas_interp",
+                          lambda p, m: pallas_update(p, m, interpret=True))]:
+            out = fn(pgm, logm)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(5):
+                out = fn(pgm, logm)
+                jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / 5 * 1e6
+            try:
+                flops, byts = _cost(fn, pgm, logm)
+            except Exception:
+                flops = byts = float("nan")
+            emit(f"kernel/{name}/{path}", us,
+                 f"hlo_flops={flops:.3e};hlo_bytes={byts:.3e};"
+                 f"E={pgm.n_edges};S={pgm.n_states_max}")

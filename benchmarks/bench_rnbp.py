@@ -1,0 +1,53 @@
+"""Paper Fig. 4 + Table III: RnBP vs LBP vs SRBP across difficulty sweep.
+
+Reproduction targets:
+  * easy graphs (C=2): RnBP(LowP=0.7) ~ LBP speed (low overhead),
+  * hard graphs (C=2.5 large / C=3): RnBP converges where LBP stalls or
+    fails, with round-count speedups over LBP,
+  * very hard (C=3): only LowP=0.1 converges reliably (convergence mode),
+  * all: large speedups over SRBP (Table III).
+"""
+
+from __future__ import annotations
+
+from repro.core import LBP, RnBP, run_srbp
+from repro.pgm import chain_graph, ising_grid
+
+from benchmarks.common import emit, graph_set, summarize, time_bp
+
+
+def run(full: bool = False, n_graphs: int = 5) -> None:
+    n = 100 if full else 40
+    n2 = 200 if full else 60
+    chain_n = 100_000 if full else 10_000
+    srbp_cap = 90.0 if full else 20.0
+    datasets = [
+        (f"ising{n}x{n}_C2", lambda s: ising_grid(n, 2.0, seed=s), 6000),
+        (f"ising{n}x{n}_C2.5", lambda s: ising_grid(n, 2.5, seed=s), 6000),
+        (f"ising{n}x{n}_C3", lambda s: ising_grid(n, 3.0, seed=s), 12000),
+        (f"ising{n2}x{n2}_C2.5", lambda s: ising_grid(n2, 2.5, seed=s), 8000),
+        (f"chain{chain_n}_C10", lambda s: chain_graph(chain_n, seed=s), 4000),
+    ]
+    for dname, factory, max_rounds in datasets:
+        graphs = graph_set(factory, n_graphs)
+        srbp = [run_srbp(g, time_limit_s=srbp_cap) for g in graphs]
+        srbp_conv = [r for r in srbp if r.converged]
+        srbp_t = (sum(r.wall_time_s for r in srbp_conv) / len(srbp_conv)
+                  if srbp_conv else srbp_cap)
+        bound = "" if srbp_conv else ">"
+        emit(f"fig4-tabIII/{dname}/SRBP", srbp_t * 1e6,
+             f"conv={100 * len(srbp_conv) // len(srbp)}%")
+        for sched_name, sched in [
+            ("LBP", LBP()),
+            ("RnBP_low0.7", RnBP(low_p=0.7)),
+            ("RnBP_low0.4", RnBP(low_p=0.4)),
+            ("RnBP_low0.1", RnBP(low_p=0.1)),
+        ]:
+            stats = [time_bp(g, sched, max_rounds=max_rounds) for g in graphs]
+            s = summarize(stats)
+            speedup = (srbp_t / s["mean_wall_s"]
+                       if s["mean_wall_s"] > 0 else float("nan"))
+            emit(f"fig4-tabIII/{dname}/{sched_name}",
+                 s["mean_wall_s"] * 1e6,
+                 f"conv={s['conv_pct']:.0f}%;rounds={s['mean_rounds']:.0f};"
+                 f"srbp_speedup={bound}{speedup:.2f}x")

@@ -1,0 +1,37 @@
+"""Paper Fig. 2: the parallelism <-> convergence trade-off (GPU RS vs LBP).
+
+Sweeps the frontier multiplier p for Residual Splash on Ising and chain
+datasets, reporting cumulative convergence % and speed. Expected
+reproduction: lower p => more graphs converge, but slower (more rounds);
+LBP (p = full) is fastest where it converges at all.
+"""
+
+from __future__ import annotations
+
+from repro.core import LBP, RS
+from repro.pgm import chain_graph, ising_grid
+
+from benchmarks.common import emit, graph_set, summarize, time_bp
+
+
+def run(full: bool = False, n_graphs: int = 5) -> None:
+    n = 100 if full else 40
+    chain_n = 100_000 if full else 10_000
+    datasets = [
+        (f"ising{n}x{n}_C2.5", lambda s: ising_grid(n, 2.5, seed=s)),
+        (f"chain{chain_n}_C10", lambda s: chain_graph(chain_n, seed=s)),
+    ]
+    max_rounds = 8000 if full else 4000
+    for dname, factory in datasets:
+        graphs = graph_set(factory, n_graphs)
+        for sched_name, sched in [
+            ("LBP", LBP()),
+            ("RS_p1/16", RS(p=1.0 / 16)),
+            ("RS_p1/64", RS(p=1.0 / 64)),
+            ("RS_p1/256", RS(p=1.0 / 256)),
+        ]:
+            stats = [time_bp(g, sched, max_rounds=max_rounds) for g in graphs]
+            s = summarize(stats)
+            emit(f"fig2/{dname}/{sched_name}", s["mean_wall_s"] * 1e6,
+                 f"conv={s['conv_pct']:.0f}%;rounds={s['mean_rounds']:.0f};"
+                 f"updates={s['mean_updates']:.0f}")

@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing.
+
+Every paper table/figure gets one module; each emits CSV rows
+``name,us_per_call,derived`` where ``us_per_call`` is mean wall-time per
+graph (microseconds) and ``derived`` packs the paper's actual metrics
+(convergence %, rounds, speedups, KL).
+
+Scale note: the paper benchmarks a V100; this container is one CPU core, so
+default sizes are scaled down (Ising 50x50 instead of 100/200, chain 10^4
+instead of 10^5) and ``--full`` restores paper scale. Round counts and
+convergence rates -- the hardware-independent quantities -- are the primary
+reproduction targets; wall-clock ratios are secondary on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import run_bp
+from repro.core.graph import PGM
+
+
+@dataclasses.dataclass
+class RunStat:
+    converged: bool
+    rounds: int
+    wall_s: float
+    updates: float
+
+
+def time_bp(pgm: PGM, scheduler, *, eps: float = 1e-3, max_rounds: int = 4000,
+            seed: int = 0, update_fn=None) -> RunStat:
+    kwargs = {} if update_fn is None else dict(update_fn=update_fn)
+    # compile first (compile time is not a paper metric)
+    res = run_bp(pgm, scheduler, jax.random.key(seed), eps=eps,
+                 max_rounds=max_rounds, **kwargs)
+    jax.block_until_ready(res.logm)
+    t0 = time.perf_counter()
+    res = run_bp(pgm, scheduler, jax.random.key(seed), eps=eps,
+                 max_rounds=max_rounds, **kwargs)
+    jax.block_until_ready(res.logm)
+    wall = time.perf_counter() - t0
+    return RunStat(bool(res.converged), int(res.rounds), wall,
+                   float(res.updates))
+
+
+def summarize(stats: Sequence[RunStat]) -> dict:
+    conv = [s for s in stats if s.converged]
+    return dict(
+        conv_pct=100.0 * len(conv) / max(len(stats), 1),
+        mean_rounds=float(np.mean([s.rounds for s in conv])) if conv else -1.0,
+        mean_wall_s=float(np.mean([s.wall_s for s in conv])) if conv else -1.0,
+        mean_updates=float(np.mean([s.updates for s in conv])) if conv else -1.0,
+    )
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def graph_set(factory: Callable[[int], PGM], n: int) -> List[PGM]:
+    return [factory(seed) for seed in range(n)]

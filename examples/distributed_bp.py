@@ -1,0 +1,55 @@
+"""Multi-device BP via shard_map (run with forced host devices on CPU).
+
+Demonstrates the pod-scale path: edges sharded over a 1-D mesh, per-shard
+threefry streams for the randomized filter, psum'd convergence votes.
+
+Run:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/distributed_bp.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LBP, RnBP, run_bp
+from repro.dist import make_bp_mesh, run_bp_sharded
+from repro.pgm import ising_grid
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    mesh = make_bp_mesh()
+    pgm = ising_grid(48, 2.5, seed=0)
+    print(f"Ising 48x48: {pgm.n_real_edges} directed edges over "
+          f"{mesh.devices.size} shards")
+
+    ref = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(0), eps=1e-3,
+                 max_rounds=6000)
+    print(f"single-device RnBP: rounds={int(ref.rounds)} "
+          f"converged={bool(ref.converged)}")
+
+    for sched in [LBP(), RnBP(low_p=0.7)]:
+        t0 = time.perf_counter()
+        res = run_bp_sharded(pgm, sched, mesh, jax.random.key(0),
+                             eps=1e-3, max_rounds=6000)
+        jax.block_until_ready(res.beliefs)
+        diff = float(jnp.max(jnp.abs(jnp.where(
+            pgm.state_mask, res.beliefs - ref.beliefs, 0.0))))
+        print(f"sharded {type(sched).__name__:5s}: "
+              f"rounds={int(res.rounds):5d} "
+              f"converged={bool(res.converged)} "
+              f"max-belief-diff-vs-ref={diff:.2e} "
+              f"wall={time.perf_counter() - t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

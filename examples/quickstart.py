@@ -1,0 +1,50 @@
+"""Quickstart: Randomized Belief Propagation on an Ising grid.
+
+Reproduces the paper's core result in miniature: on a hard Ising grid,
+synchronous (Loopy) BP stalls while RnBP's randomized frontier converges,
+at the same per-round cost and with no sort-and-select overhead.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import LBP, RBP, RnBP, run_bp
+from repro.pgm import ising_grid
+
+
+def main():
+    # C controls difficulty (paper SSIII-C); this instance is in the regime
+    # where synchronous LBP oscillates forever but randomized scheduling
+    # converges (paper Fig 4b)
+    pgm = ising_grid(40, C=2.5, seed=2)
+    print(f"Ising 40x40, C=2.5: {pgm.n_real_vertices} vertices, "
+          f"{pgm.n_real_edges} directed edges")
+
+    for name, sched in [
+        ("LBP  (all messages)      ", LBP()),
+        ("RBP  (top-k, p=1/128)    ", RBP(p=1 / 128)),
+        ("RnBP (random, LowP=0.4)  ", RnBP(low_p=0.4)),
+        ("RnBP (random, LowP=0.1)  ", RnBP(low_p=0.1)),
+    ]:
+        t0 = time.perf_counter()
+        res = run_bp(pgm, sched, jax.random.key(0), eps=1e-3,
+                     max_rounds=8000)
+        jax.block_until_ready(res.logm)
+        dt = time.perf_counter() - t0
+        status = "converged" if bool(res.converged) else "STALLED  "
+        print(f"{name} {status} rounds={int(res.rounds):5d} "
+              f"committed-updates={float(res.updates):10.0f} "
+              f"wall={dt:6.2f}s")
+
+    res = run_bp(pgm, RnBP(low_p=0.4), jax.random.key(0), eps=1e-3,
+                 max_rounds=8000)
+    beliefs = np.exp(np.asarray(res.beliefs))[:pgm.n_real_vertices]
+    print("\nfirst 5 marginals P(x_i = 1):", np.round(beliefs[:5, 1], 4))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Render the EXPERIMENTS.md roofline table from experiments/dryrun/*.json."""
+
+import glob
+import json
+import os
+import sys
+
+HW_NOTE = "197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link (TPU v5e)"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def render(d="experiments/dryrun", mesh_filter="16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(path))
+        if r.get("status") != "ok" or r["mesh"] != mesh_filter:
+            continue
+        terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": r["t_collective"]}
+        dom = r["bottleneck"]
+        t_dom = terms[dom]
+        t_comp = terms["compute"]
+        frac = t_comp / max(sum(terms.values()), 1e-30)
+        fit = (r.get("memory_per_device") or {}).get("peak_ok_16GB", None)
+        rows.append({
+            "cell": f"{r['arch']} x {r['shape']}",
+            "kind": r["kind"],
+            "t_c": terms["compute"], "t_m": terms["memory"],
+            "t_x": terms["collective"], "dom": dom,
+            "useful": r["useful_ratio"],
+            "roofline_frac": frac, "fits": fit,
+        })
+    print(f"| cell | kind | compute | memory | collective | bottleneck | "
+          f"useful (6ND/HLO) | roofline frac | fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['cell']} | {r['kind']} | {fmt_s(r['t_c'])} | "
+              f"{fmt_s(r['t_m'])} | {fmt_s(r['t_x'])} | **{r['dom']}** | "
+              f"{r['useful']:.2f} | {r['roofline_frac']:.2f} | "
+              f"{'yes' if r['fits'] else 'NO' if r['fits'] is not None else '?'} |")
+
+
+if __name__ == "__main__":
+    render(mesh_filter=sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (latest_step, restore_pytree, save_pytree)
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step"]

@@ -1,0 +1,7 @@
+from repro.configs.base import (ALL_SHAPES, ARCH_IDS, ArchConfig, InputShape,
+                                all_configs, get,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+__all__ = ["ALL_SHAPES", "ARCH_IDS", "ArchConfig", "InputShape",
+           "all_configs", "get", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+           "LONG_500K"]

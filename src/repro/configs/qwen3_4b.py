@@ -1,0 +1,9 @@
+"""Qwen3-4B (dense, GQA kv=8, qk_norm). [hf:Qwen/Qwen3-8B; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab=151936, mlp_act="silu", qk_norm=True, rope_theta=1e6,
+    tie_embeddings=True,
+)

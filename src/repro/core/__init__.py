@@ -1,0 +1,23 @@
+"""Core Belief Propagation library -- the paper's contribution.
+
+Public API:
+  build_pgm          padded pairwise-MRF builder
+  run_bp             frontier-based BP (Algorithm 1) under jit
+  LBP/RBP/RS/RnBP    message schedulings (Table IV)
+  run_srbp           serial residual BP baseline
+  ve_marginals, brute_force_marginals, kl_divergence   exact oracles
+"""
+
+from repro.core.graph import PGM, build_pgm, NEG_INF
+from repro.core.runner import BPResult, run_bp
+from repro.core.schedulers import LBP, RBP, RS, RnBP
+from repro.core.serial import SRBPResult, run_srbp
+from repro.core.exact import (brute_force_marginals, kl_divergence,
+                              ve_marginals)
+from repro.core import messages
+
+__all__ = [
+    "PGM", "build_pgm", "NEG_INF", "BPResult", "run_bp",
+    "LBP", "RBP", "RS", "RnBP", "SRBPResult", "run_srbp",
+    "brute_force_marginals", "kl_divergence", "ve_marginals", "messages",
+]

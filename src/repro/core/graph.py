@@ -1,0 +1,219 @@
+"""Pairwise discrete MRF representation for many-core Belief Propagation.
+
+The paper (Van der Merwe et al., 2019) stores the PGM as an adjacency list
+with per-edge/vertex IDs assigned to CUDA threads. The TPU/XLA analogue is a
+*static-shape, padded, structure-of-arrays* layout:
+
+- every undirected edge {i, j} becomes two *directed* edges (i->j), (j->i);
+  message ``m[e]`` lives on directed edge ``e``,
+- ``edge_rev[e]`` gives the index of the opposing directed edge (needed to
+  exclude ``m_{j->i}`` when computing ``m_{i->j}``),
+- vertices may have heterogeneous state counts (protein-folding graphs range
+  2..81); everything is padded to ``n_states`` with masked ``-NEG_INF``
+  potentials,
+- edge and vertex arrays are padded to lane-friendly multiples so the Pallas
+  kernel can put the edge dimension on the 128-wide lane axis.
+
+All arrays are plain ``jnp`` arrays registered as a pytree so a ``PGM`` can be
+passed through ``jax.jit`` / ``shard_map`` unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large-negative stand-in for log(0). Chosen so that summing ~1e2 of them in
+# float32 stays far from -inf/NaN territory while exp() underflows to exactly 0.
+NEG_INF = -1.0e30
+
+# Edge-count padding multiple. 128 = TPU lane width; the Pallas message kernel
+# tiles edges along lanes.
+EDGE_PAD = 128
+VERTEX_PAD = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PGM:
+    """Padded, directed-edge MRF.
+
+    Shapes (E = padded directed-edge count, V = padded vertex count + 1 dummy,
+    S = padded state count):
+      edge_src, edge_dst, edge_rev : (E,)  int32
+      edge_mask                    : (E,)  bool    True for real edges
+      log_psi_e                    : (E, S, S) f32  [x_src, x_dst]
+      log_psi_v                    : (V, S) f32     NEG_INF at invalid states
+      state_mask                   : (V, S) bool
+      n_states                     : (V,)  int32
+    """
+
+    edge_src: jax.Array
+    edge_dst: jax.Array
+    edge_rev: jax.Array
+    edge_mask: jax.Array
+    log_psi_e: jax.Array
+    log_psi_v: jax.Array
+    state_mask: jax.Array
+    n_states: jax.Array
+    # Static metadata (ints, not traced).
+    n_real_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_real_edges: int = dataclasses.field(metadata=dict(static=True))  # directed
+
+    @property
+    def n_edges(self) -> int:
+        """Padded directed edge count."""
+        return self.edge_src.shape[0]
+
+    @property
+    def n_vertices(self) -> int:
+        """Padded vertex count (includes 1 dummy sink vertex)."""
+        return self.log_psi_v.shape[0]
+
+    @property
+    def n_states_max(self) -> int:
+        return self.log_psi_v.shape[1]
+
+    def degree(self) -> jax.Array:
+        """In-degree per vertex (== out-degree; graph is symmetric)."""
+        return jax.ops.segment_sum(
+            self.edge_mask.astype(jnp.int32), self.edge_dst,
+            num_segments=self.n_vertices)
+
+
+def build_pgm_uniform(
+    n_vertices: int,
+    edges: np.ndarray,          # (E_und, 2)
+    unary: np.ndarray,          # (V, S) linear-space
+    pairwise: np.ndarray,       # (E_und, S, S) linear-space
+    *,
+    edge_pad: int = EDGE_PAD,
+    dtype=jnp.float32,
+) -> PGM:
+    """Vectorized builder for uniform state-count graphs (Ising/chain at any
+    scale -- the python-loop path in ``build_pgm`` is O(E) interpreter time).
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    e_und = edges.shape[0]
+    e_dir = 2 * e_und
+    s = unary.shape[1]
+    e_pad = _round_up(max(e_dir, 1), edge_pad)
+    v_pad = _round_up(n_vertices + 1, VERTEX_PAD)
+    dummy = n_vertices
+
+    edge_src = np.full((e_pad,), dummy, dtype=np.int32)
+    edge_dst = np.full((e_pad,), dummy, dtype=np.int32)
+    edge_rev = np.arange(e_pad, dtype=np.int32)
+    edge_mask = np.zeros((e_pad,), dtype=bool)
+    log_psi_e = np.zeros((e_pad, s, s), dtype=np.float32)
+    log_psi_v = np.full((v_pad, s), NEG_INF, dtype=np.float32)
+    state_mask = np.zeros((v_pad, s), dtype=bool)
+    n_states = np.full((v_pad,), 1, dtype=np.int32)
+
+    fwd = np.arange(0, e_dir, 2)
+    bwd = fwd + 1
+    edge_src[fwd], edge_dst[fwd] = edges[:, 0], edges[:, 1]
+    edge_src[bwd], edge_dst[bwd] = edges[:, 1], edges[:, 0]
+    edge_rev[fwd], edge_rev[bwd] = bwd, fwd
+    edge_mask[:e_dir] = True
+    lp = np.log(pairwise.astype(np.float64)).astype(np.float32)
+    log_psi_e[fwd] = lp
+    log_psi_e[bwd] = np.swapaxes(lp, 1, 2)
+    log_psi_v[:n_vertices] = np.log(unary.astype(np.float64))
+    state_mask[:n_vertices] = True
+    n_states[:n_vertices] = s
+    log_psi_v[dummy:, 0] = 0.0
+    state_mask[dummy:, 0] = True
+
+    return PGM(
+        edge_src=jnp.asarray(edge_src), edge_dst=jnp.asarray(edge_dst),
+        edge_rev=jnp.asarray(edge_rev), edge_mask=jnp.asarray(edge_mask),
+        log_psi_e=jnp.asarray(log_psi_e, dtype=dtype),
+        log_psi_v=jnp.asarray(log_psi_v, dtype=dtype),
+        state_mask=jnp.asarray(state_mask), n_states=jnp.asarray(n_states),
+        n_real_vertices=n_vertices, n_real_edges=e_dir)
+
+
+def build_pgm(
+    n_vertices: int,
+    edges: np.ndarray,              # (E_und, 2) int, undirected vertex pairs
+    unary: Sequence[np.ndarray],    # per-vertex (S_i,) potentials, linear space
+    pairwise: Sequence[np.ndarray],  # per-undirected-edge (S_i, S_j), linear
+    *,
+    edge_pad: int = EDGE_PAD,
+    state_pad_to: int | None = None,
+    dtype=jnp.float32,
+) -> PGM:
+    """Build a padded PGM from host-side numpy potentials (linear space).
+
+    Potentials must be strictly positive (MRF definition, psi: -> R+).
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    assert edges.ndim == 2 and edges.shape[1] == 2
+    e_und = edges.shape[0]
+    e_dir = 2 * e_und
+
+    n_states_arr = np.array([len(u) for u in unary], dtype=np.int32)
+    s_max = int(n_states_arr.max()) if len(unary) else 1
+    if state_pad_to is not None:
+        s_max = max(s_max, state_pad_to)
+
+    e_pad = _round_up(max(e_dir, 1), edge_pad)
+    v_pad = _round_up(n_vertices + 1, VERTEX_PAD)  # +1 dummy sink vertex
+    dummy = n_vertices  # padded edges point at the dummy vertex
+
+    edge_src = np.full((e_pad,), dummy, dtype=np.int32)
+    edge_dst = np.full((e_pad,), dummy, dtype=np.int32)
+    edge_rev = np.arange(e_pad, dtype=np.int32)  # padded edges self-reverse
+    edge_mask = np.zeros((e_pad,), dtype=bool)
+    log_psi_e = np.zeros((e_pad, s_max, s_max), dtype=np.float32)
+    log_psi_v = np.full((v_pad, s_max), NEG_INF, dtype=np.float32)
+    state_mask = np.zeros((v_pad, s_max), dtype=bool)
+    n_states = np.ones((v_pad,), dtype=np.int32)
+
+    for v in range(n_vertices):
+        s = int(n_states_arr[v])
+        u = np.asarray(unary[v], dtype=np.float64)
+        assert u.shape == (s,) and np.all(u > 0), f"bad unary at vertex {v}"
+        log_psi_v[v, :s] = np.log(u)
+        state_mask[v, :s] = True
+        n_states[v] = s
+    # Dummy vertex: single valid state with psi=1 so padded edges stay inert.
+    log_psi_v[dummy:, 0] = 0.0
+    state_mask[dummy:, 0] = True
+
+    for k in range(e_und):
+        i, j = int(edges[k, 0]), int(edges[k, 1])
+        si, sj = int(n_states_arr[i]), int(n_states_arr[j])
+        p = np.asarray(pairwise[k], dtype=np.float64)
+        assert p.shape == (si, sj) and np.all(p > 0), f"bad pairwise at edge {k}"
+        fwd, bwd = 2 * k, 2 * k + 1
+        edge_src[fwd], edge_dst[fwd] = i, j
+        edge_src[bwd], edge_dst[bwd] = j, i
+        edge_rev[fwd], edge_rev[bwd] = bwd, fwd
+        edge_mask[fwd] = edge_mask[bwd] = True
+        lp = np.log(p)
+        log_psi_e[fwd, :si, :sj] = lp
+        log_psi_e[bwd, :sj, :si] = lp.T
+
+    return PGM(
+        edge_src=jnp.asarray(edge_src),
+        edge_dst=jnp.asarray(edge_dst),
+        edge_rev=jnp.asarray(edge_rev),
+        edge_mask=jnp.asarray(edge_mask),
+        log_psi_e=jnp.asarray(log_psi_e, dtype=dtype),
+        log_psi_v=jnp.asarray(log_psi_v, dtype=dtype),
+        state_mask=jnp.asarray(state_mask),
+        n_states=jnp.asarray(n_states),
+        n_real_vertices=n_vertices,
+        n_real_edges=e_dir,
+    )

@@ -1,0 +1,20 @@
+"""Message schedulings studied in the paper (Table IV).
+
+| Algorithm  | Frontier selection            | Module   |
+|------------|-------------------------------|----------|
+| LBP        | all messages                  | lbp.py   |
+| RBP        | sort-and-select top-k (edges) | rbp.py   |
+| RS         | top-k vertices + depth-h splash | rs.py  |
+| RnBP       | eps-filter + randomized p     | rnbp.py  | (paper's contribution)
+
+Serial RBP (the paper's SRBP baseline, Boost Fibonacci-heap) lives in
+``repro.core.serial`` as a host-side numpy implementation.
+"""
+
+from repro.core.schedulers.base import Scheduler
+from repro.core.schedulers.lbp import LBP
+from repro.core.schedulers.rbp import RBP
+from repro.core.schedulers.rs import RS
+from repro.core.schedulers.rnbp import RnBP
+
+__all__ = ["Scheduler", "LBP", "RBP", "RS", "RnBP"]

@@ -1,0 +1,36 @@
+"""Scheduler protocol for frontier-based BP (paper Algorithm 1).
+
+A scheduler owns ``GenerateFrontier``: given the fresh residuals of *all*
+directed edges it returns a boolean frontier mask plus its own carried state.
+Schedulers are static Python objects (hashable config); their ``init``/
+``select`` are traced into the single ``lax.while_loop`` of the runner, so
+all shapes are fixed and selection is pure.
+
+``select`` receives ``unconverged`` (count of edges with residual >= eps this
+round) because RnBP's dynamic-p controller consumes it; other schedulers
+ignore it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, Tuple
+
+import jax
+
+from repro.core.graph import PGM
+
+
+class Scheduler(Protocol):
+    #: number of masked update sweeps the runner applies per selected frontier
+    #: (1 for everything except Residual Splash's depth-h inner propagation).
+    inner_sweeps: int
+
+    def init(self, pgm: PGM) -> Any:
+        """Initial carried state (a pytree of arrays; may be ())."""
+        ...
+
+    def select(self, pgm: PGM, residuals: jax.Array, eps: float,
+               rng: jax.Array, state: Any,
+               unconverged: jax.Array) -> Tuple[jax.Array, Any]:
+        """Return ``(frontier_mask(E,), new_state)``."""
+        ...

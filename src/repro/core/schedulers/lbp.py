@@ -1,0 +1,21 @@
+"""Loopy (Synchronous) BP: every message, every round (paper SS II-B)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.graph import PGM
+
+
+@dataclasses.dataclass(frozen=True)
+class LBP:
+    inner_sweeps: int = 1
+
+    def init(self, pgm: PGM):
+        return ()
+
+    def select(self, pgm: PGM, residuals: jax.Array, eps: float,
+               rng: jax.Array, state, unconverged: jax.Array):
+        return pgm.edge_mask, state

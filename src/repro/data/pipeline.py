@@ -1,0 +1,74 @@
+"""Deterministic, shardable synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step), so the pipeline "cursor" in
+a checkpoint is just the step counter -- restart-exact resume on any mesh
+size (batches are generated per-host then device_put against the batch
+sharding; no cross-host coordination needed).
+
+Token stream: Zipf-distributed ids over the vocab with a Markov bigram kick
+so the loss has learnable structure (pure uniform tokens give a flat loss
+-- useless for the convergence examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def make_batch_specs(cfg: ArchConfig, shape: InputShape,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one *global* training batch (see launch.dryrun
+    for the per-shape serve variants)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.frontend == "vision":
+        t = cfg.n_frontend_tokens
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, t, cfg.d_model), dtype)
+        s = s - t                       # total sequence stays shape.seq_len
+    if cfg.frontend == "audio":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), dtype)
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return specs
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    cfg: ArchConfig
+    shape: InputShape
+    seed: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        cfg, shape = self.cfg, self.shape
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        ks = jax.random.split(key, 4)
+        b, s = shape.global_batch, shape.seq_len
+        extra = {}
+        if cfg.frontend == "vision":
+            t = cfg.n_frontend_tokens
+            extra["frontend_embeds"] = 0.02 * jax.random.normal(
+                ks[2], (b, t, cfg.d_model), jnp.bfloat16)
+            s = s - t
+        if cfg.frontend == "audio":
+            extra["frontend_embeds"] = 0.02 * jax.random.normal(
+                ks[2], (b, s, cfg.d_model), jnp.bfloat16)
+        # Zipf-ish marginal: id = floor(v * u^3) biases mass to small ids.
+        u = jax.random.uniform(ks[0], (b, s + 1))
+        toks = jnp.minimum((cfg.vocab * u ** 3).astype(jnp.int32),
+                           cfg.vocab - 1)
+        # Markov kick: with prob .5, token t+1 = (token t * 7 + 13) % vocab
+        # -- a fixed learnable bigram rule.
+        coin = jax.random.bernoulli(ks[1], 0.5, (b, s + 1))
+        nxt = (toks * 7 + 13) % cfg.vocab
+        toks = jnp.where(coin, jnp.roll(nxt, 1, axis=1), toks)
+        return dict(extra, tokens=toks[:, :s],
+                    labels=toks[:, 1:s + 1].astype(jnp.int32))

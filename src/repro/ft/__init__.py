@@ -1,0 +1,4 @@
+from repro.ft.resilience import (ElasticMesh, StragglerMonitor,
+                                 run_bp_resilient)
+
+__all__ = ["ElasticMesh", "StragglerMonitor", "run_bp_resilient"]

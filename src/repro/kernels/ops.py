@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas message-update kernel.
+
+``pallas_update(pgm, logm)`` is a drop-in replacement for
+``repro.core.messages.ref_update`` (same (E, S) layout at the boundary); it
+handles the transpose to kernel layout, edge padding to the block size, and
+interpret-mode fallback off-TPU.
+
+``pallas_update_t`` is the layout-native variant used by the perf-tuned BP
+loop, which keeps messages transposed (S, E) across rounds so the two
+transposes per round disappear (see EXPERIMENTS.md SSPerf, BP iterations).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import messages as M
+from repro.core.graph import PGM
+from repro.kernels.message_update import fused_update_t, pick_block_edges
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kernel_operands_t(pgm: PGM):
+    """Precompute the static transposed operands (do once per graph)."""
+    logpsi_t = jnp.transpose(pgm.log_psi_e, (1, 2, 0))      # (S, S, E)
+    dmask_t = pgm.state_mask[pgm.edge_dst].T                # (S, E)
+    return logpsi_t, dmask_t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pallas_update(pgm: PGM, logm: jax.Array, *, interpret: bool | None = None):
+    """(cand (E,S), resid (E,)) -- kernel-backed ref_update equivalent."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    pre = M.edge_prelude(pgm, logm)                          # (E, S)
+    logpsi_t, dmask_t = kernel_operands_t(pgm)
+    new_t, resid = fused_update_t(
+        logpsi_t, pre.T, logm.T, dmask_t, interpret=interpret)
+    return new_t.T, resid
+
+
+def make_pallas_update(interpret: bool | None = None):
+    """Static-arg-free closure suitable for ``run_bp(update_fn=...)``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    def update_fn(pgm: PGM, logm: jax.Array):
+        return pallas_update(pgm, logm, interpret=interpret)
+
+    return update_fn

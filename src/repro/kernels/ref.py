@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused message-update kernel.
+
+Mirrors ``message_update.fused_update_t`` exactly (same transposed layout,
+same masking/normalization semantics) so tests can assert_allclose across
+shape/dtype sweeps. The underlying math also lives in ``repro.core.messages``
+in (E, S) layout; this module is the kernel-layout contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def fused_update_t_ref(logpsi_t: jax.Array,   # (S, S, E)
+                       pre_t: jax.Array,      # (S, E)
+                       logm_t: jax.Array,     # (S, E)
+                       dmask_t: jax.Array):   # (S, E) bool-ish
+    scores = logpsi_t + pre_t[:, None, :]
+    m = jnp.maximum(jnp.max(scores, axis=0), NEG_INF)
+    s = jnp.sum(jnp.exp(scores - m[None]), axis=0)
+    cand = m + jnp.log(jnp.maximum(s, 1e-38))
+    dmask = dmask_t != 0
+    cand = jnp.where(dmask, cand, NEG_INF)
+    zm = jnp.maximum(jnp.max(cand, axis=0), NEG_INF)
+    zs = jnp.sum(jnp.where(dmask, jnp.exp(cand - zm[None]), 0.0), axis=0)
+    z = zm + jnp.log(jnp.maximum(zs, 1e-38))
+    new = jnp.where(dmask, cand - z[None], NEG_INF)
+    resid = jnp.max(jnp.where(dmask, jnp.abs(new - logm_t), 0.0), axis=0)
+    return new, resid

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 TPU v5e pods.
+For each cell we:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(**input_specs(arch, shape))
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes -> JSON
+
+Cells: the 10 assigned archs x their shapes (long_500k only for
+sub-quadratic archs -- see DESIGN.md), plus the BP workload itself
+(`bp_ising`, `bp_chain`) so the paper's contribution goes through the same
+production meshes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b --shape train_4k
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import (data_axes, make_production_mesh, model_size)
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   param_shardings, replicated,
+                                   train_state_shardings)
+from repro.models import build_model
+from repro.roofline import analyze_compiled, model_flops
+from repro.roofline.jaxpr_cost import trace_cost
+from repro.train.step import make_train_step, train_state_specs
+
+
+def _tree_bytes(tree) -> float:
+    import numpy as np
+    return float(sum(np.prod(l.shape, dtype=np.float64)
+                     * np.dtype(l.dtype).itemsize
+                     for l in jax.tree.leaves(tree)))
+
+BP_CELLS = ("bp_ising_512", "bp_chain_1m", "bp_ising_512_banded",
+            "bp_chain_1m_banded")
+
+
+def _spec_tokens(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    model = build_model(cfg)
+    if shape.kind == "train":
+        return {"batch": make_batch_specs(cfg, shape)}
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.frontend == "vision":
+            t = cfg.n_frontend_tokens
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, t, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = _spec_tokens(b, s - t)
+        elif cfg.frontend == "audio":
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = _spec_tokens(b, 1)   # decoder BOS
+        else:
+            batch["tokens"] = _spec_tokens(b, s)
+        return {"batch": batch}
+    # decode: one token against a seq_len cache
+    return {"cache": model.init_cache_specs(b, s),
+            "tokens": _spec_tokens(b, 1),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               microbatches: int = 1, remat: bool = True,
+               sharding_mode: str = "tp", moe_dispatch: str = ""):
+    """Returns (lowered, compiled, meta) for one cell."""
+    import dataclasses as _dc
+    cfg = get(arch)
+    if moe_dispatch and cfg.n_experts:
+        cfg = _dc.replace(cfg, moe_dispatch=moe_dispatch)
+        if moe_dispatch == "sharded":
+            from repro.models.layers.moe import set_shard_mesh
+            set_shard_mesh(mesh)
+    shape = next(s for s in cfg.shapes() if s.name == shape_name)
+    act_spec = None
+    if sharding_mode == "fsdp":
+        b = shape.global_batch
+        fsdp = mesh.shape["data"] * mesh.shape["model"]
+        if b % fsdp == 0 and b >= fsdp:
+            act_spec = P(("data", "model"), None, None)
+    model = build_model(cfg)
+    model.act_spec = act_spec
+    specs = input_specs(cfg, shape)
+    n_dev = mesh.devices.size
+
+    with mesh:
+        if shape.kind == "train":
+            state_specs = train_state_specs(model)
+            state_sh = train_state_shardings(mesh, state_specs,
+                                             mode=sharding_mode)
+            step = make_train_step(
+                model, microbatches=microbatches, remat=remat,
+                grad_shardings=(state_sh.params
+                                if sharding_mode == "fsdp" else None))
+            batch_sh = batch_shardings(mesh, specs["batch"],
+                                       mode=sharding_mode)
+            fn = jax.jit(step,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None))
+            lowered = fn.lower(state_specs, specs["batch"])
+            logical = trace_cost(step, state_specs, specs["batch"])
+            param_bytes = _tree_bytes(state_specs.params)
+            n_tokens = shape.global_batch * shape.seq_len
+            kind = "train"
+        elif shape.kind == "prefill":
+            p_specs = model.param_specs()
+            p_sh = param_shardings(mesh, p_specs)
+            batch_sh = batch_shardings(mesh, specs["batch"])
+            fn = jax.jit(model.prefill, in_shardings=(p_sh, batch_sh),
+                         out_shardings=None)
+            lowered = fn.lower(p_specs, specs["batch"])
+            logical = trace_cost(model.prefill, p_specs, specs["batch"])
+            param_bytes = _tree_bytes(p_specs)
+            n_tokens = shape.global_batch * shape.seq_len
+            kind = "prefill"
+        else:
+            p_specs = model.param_specs()
+            p_sh = param_shardings(mesh, p_specs)
+            cache_sh = cache_shardings(mesh, specs["cache"])
+            tok_sh = batch_shardings(mesh, specs["tokens"])
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(p_sh, cache_sh, tok_sh,
+                                       NamedSharding(mesh, P())),
+                         out_shardings=(None, cache_sh))
+            lowered = fn.lower(p_specs, specs["cache"], specs["tokens"],
+                               specs["pos"])
+            logical = trace_cost(model.decode_step, p_specs, specs["cache"],
+                                 specs["tokens"], specs["pos"])
+            param_bytes = _tree_bytes(p_specs)
+            n_tokens = shape.global_batch  # one token per sequence
+            kind = "decode"
+        compiled = lowered.compile()
+
+    mf = model_flops(model.param_specs(), n_tokens, cfg=cfg, kind=kind)
+    # fsdp: params are gathered whole per layer -> per-device param traffic
+    # ~= full param bytes (model_axis divisor does not apply)
+    m_axis = 1 if sharding_mode == "fsdp" else model_size(mesh)
+    return lowered, compiled, {"model_flops": mf, "n_devices": n_dev,
+                               "kind": kind, "logical": logical,
+                               "param_bytes": param_bytes,
+                               "model_axis": m_axis}
+
+
+def lower_bp_cell(name: str, mesh):
+    """BP workload cells through the same production mesh (flattened to a
+    1-D 'bp' axis view via the mesh's devices)."""
+    from repro.core import RnBP
+    from repro.dist.bp_shard import partition_pgm, run_bp_sharded
+    from repro.pgm import chain_graph, ising_grid_fast
+
+    n_dev = mesh.devices.size
+    bp_mesh = jax.make_mesh((n_dev,), ("bp",),
+                            devices=mesh.devices.reshape(-1))
+    if "ising" in name:
+        pgm = ising_grid_fast(512, 2.5, seed=0)
+    else:
+        pgm = chain_graph(1_000_000, C=10.0, seed=0)
+    sched = RnBP(low_p=0.7)
+
+    if name.endswith("_banded"):
+        from repro.dist.bp_banded import partition_banded, run_bp_banded
+        part = partition_banded(pgm, n_dev)
+
+        def bp_step(part_arrs, rng):
+            return run_bp_banded(part_arrs, sched, bp_mesh, rng,
+                                 eps=1e-3, max_rounds=100)
+
+        # run_bp_banded takes the dataclass; trace via a thin wrapper over
+        # its jnp arrays
+        import dataclasses as _dc
+
+        def bp_step2(arr_dict, rng):
+            p2 = _dc.replace(part, **{k: v for k, v in arr_dict.items()})
+            return run_bp_banded(p2, sched, bp_mesh, rng, eps=1e-3,
+                                 max_rounds=100)
+
+        arr_keys = ("src_l", "dst_l", "rev_l", "emask", "log_psi_e",
+                    "log_psi_v", "smask_v", "n_states_v")
+        arrs = {k: jnp.asarray(getattr(part, k)) for k in arr_keys}
+        specs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), arrs)
+        with bp_mesh:
+            lowered = jax.jit(bp_step2).lower(specs, jax.random.key(0))
+            compiled = lowered.compile()
+            logical = trace_cost(bp_step2, specs, jax.random.key(0),
+                                 while_trips=100.0)
+        e, s = pgm.n_real_edges, pgm.n_states_max
+        mf = 100 * e * (4 * s * s + 6 * s)
+        return lowered, compiled, {"model_flops": float(mf),
+                                   "n_devices": n_dev, "kind": "bp",
+                                   "logical": logical, "param_bytes": 0.0,
+                                   "model_axis": 1}
+
+    def bp_step(pgm_in, rng):
+        return run_bp_sharded(pgm_in, sched, bp_mesh, rng, eps=1e-3,
+                              max_rounds=100)
+
+    pgm = partition_pgm(pgm, n_dev)
+    pgm_specs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), pgm)
+    rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    with bp_mesh:
+        lowered = jax.jit(bp_step).lower(
+            pgm_specs, jax.random.key(0))
+        compiled = lowered.compile()
+        logical = trace_cost(bp_step, pgm_specs, jax.random.key(0),
+                             while_trips=100.0)
+    # BP "model flops": one message pass = E * S^2 * ~4 flops x rounds(=100)
+    e, s = pgm.n_real_edges, pgm.n_states_max
+    mf = 100 * e * (4 * s * s + 6 * s)
+    return lowered, compiled, {"model_flops": float(mf),
+                               "n_devices": n_dev, "kind": "bp",
+                               "logical": logical, "param_bytes": 0.0,
+                               "model_axis": 1}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             *, microbatches: int = 1, quiet: bool = False,
+             sharding_mode: str = "tp", tag: str = "",
+             moe_dispatch: str = "") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        if arch.startswith("bp_"):
+            lowered, compiled, meta = lower_bp_cell(arch, mesh)
+        else:
+            lowered, compiled, meta = lower_cell(
+                arch, shape_name, mesh, microbatches=microbatches,
+                sharding_mode=sharding_mode, moe_dispatch=moe_dispatch)
+        report = analyze_compiled(
+            compiled, n_devices=meta["n_devices"],
+            logical_flops=meta["logical"].flops,
+            logical_bytes=meta["logical"].bytes,
+            param_bytes=meta["param_bytes"],
+            model_axis=meta["model_axis"],
+            model_flops_global=meta["model_flops"])
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "kind": meta["kind"],
+            "compile_s": round(time.time() - t0, 1),
+            **report.as_dict(),
+        }
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if not quiet:
+        if rec["status"] == "ok":
+            mem = rec.get("memory_per_device") or {}
+            print(f"[ok] {arch:22s} {shape_name:12s} {mesh_name:8s} "
+                  f"flops/dev={rec['flops']:.3e} bytes/dev={rec['hbm_bytes']:.3e} "
+                  f"coll/dev={rec['coll_bytes']:.3e} bn={rec['bottleneck']:10s} "
+                  f"useful={rec['useful_ratio']:.2f} "
+                  f"tmp={mem.get('temp_bytes', -1):.2e} "
+                  f"t={rec['compile_s']}s", flush=True)
+        else:
+            print(f"[FAIL] {arch} {shape_name} {mesh_name}: {rec['error']}",
+                  flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--moe-dispatch", default="",
+                    choices=["", "ragged", "dense", "sharded"])
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) + list(BP_CELLS) if args.arch == "all" \
+        else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        if arch.startswith("bp_"):
+            shapes = ["-"]
+        else:
+            cfg = get(arch)
+            shapes = [s.name for s in cfg.shapes()] if args.shape == "all" \
+                else args.shape.split(",")
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, args.out,
+                               microbatches=args.microbatches,
+                               sharding_mode=args.sharding, tag=args.tag,
+                               moe_dispatch=args.moe_dispatch)
+                n_fail += rec["status"] != "ok"
+    print(f"dry-run complete; failures: {n_fail}")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh factories.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (jax locks the platform/device count on first use, and the
+dry-run needs to set XLA_FLAGS before that happens).
+
+Production target: TPU v5e pods, 256 chips (16 x 16) per pod; the multi-pod
+mesh prepends a "pod" axis (2 x 16 x 16 = 512 chips). "data" carries batch
+(and sequence for the long-context cells), "model" carries tensor/expert
+parallelism. The BP workload flattens the whole mesh into one "bp" axis
+(edge-parallel; see repro.dist).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh) -> int:
+    out = 1
+    for a in data_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"]

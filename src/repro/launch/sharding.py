@@ -1,0 +1,215 @@
+"""Sharding rules: parameters, optimizer state, batches, KV/SSM caches.
+
+Divisibility-aware resolver: a dimension is sharded over "model" only when
+divisible by the axis size; otherwise the rule degrades to replication for
+that leaf (correct, just less parallel -- e.g. hymba's 25 attention heads or
+whisper's 51865-token vocab). Batch dims shard over ("pod","data") when
+divisible (always true for the assigned shapes except long_500k's batch=1,
+which replicates batch and relies on sequence/model parallelism).
+
+Megatron-style defaults:
+  column-parallel (shard output dim):  wq/wk/wv/w_in/w_gate/w_uq/... ,
+  row-parallel    (shard input  dim):  wo/w_out/shared_w_out/proj ,
+  MoE experts: tensor-parallel on d_ff (all experts resident per device,
+  no all-to-all; see repro.models.layers.moe docstring),
+  embeddings: vocab-sharded when divisible,
+  KV caches: *sequence*-sharded over "model" (flash-decoding style -- the
+  softmax over the sharded key axis becomes a tiny all-reduce of per-shard
+  max/sum instead of an all-gather of the cache).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes, model_size
+
+ROW_PARALLEL = {"wo", "w_out", "shared_w_out", "proj"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _param_pspec(path, leaf, mp: int, stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf. ``stacked`` strips a leading
+    layer axis (scan-stacked blocks)."""
+    name = _leaf_name(path)
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    nd = len(shape)
+    lead = (None,) if stacked else ()
+
+    def ok(d):
+        return shape[d] % mp == 0 and shape[d] >= mp
+
+    if nd <= 1:
+        return P(*lead, *([None] * nd))
+    if name == "table":                       # embedding / lm head
+        if ok(0):
+            return P(*lead, "model", None)
+        return P(*lead, None, "model") if ok(1) else P(*lead, None, None)
+    if nd == 3:                               # MoE expert stacks (E, a, b)
+        if name in ROW_PARALLEL:
+            return P(*lead, None, "model", None) if ok(1) \
+                else P(*lead, None, None, None)
+        return P(*lead, None, None, "model") if ok(2) \
+            else P(*lead, None, None, None)
+    if nd == 2:
+        if name in ROW_PARALLEL:
+            return P(*lead, "model", None) if ok(0) else P(*lead, None, None)
+        return P(*lead, None, "model") if ok(1) else P(*lead, None, None)
+    return P(*lead, *([None] * nd))
+
+
+def _fsdp_pspec(path, leaf, axes: tuple, axes_size: int,
+                stacked: bool) -> P:
+    """ZeRO-3: shard every parameter on its largest divisible trailing dim
+    over the flattened (data, model) axes; no tensor parallelism, so layers
+    run collective-free and the only collectives are per-layer param
+    all-gathers (bf16) + gradient reduce-scatters."""
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    lead = (None,) if stacked else ()
+    if not shape:
+        return P(*lead)
+    # small leaves (norms, biases): gathering them 256-wide costs more in
+    # resharding churn than replication costs in memory -> replicate
+    n_elems = 1
+    for d in shape:
+        n_elems *= d
+    if n_elems < (1 << 20):
+        return P(*lead, *([None] * len(shape)))
+    name = _leaf_name(path)
+    if name == "table":               # embeddings: shard vocab rows
+        dims = list(range(len(shape)))
+    else:
+        # prefer the OUTPUT (last) dim: sharding the contracting dim would
+        # turn every x@W into a partial-sum + activation-sized psum (seen:
+        # 19 TB/step of per-layer all-reduce on mistral -- SSPerf iter 2)
+        dims = list(range(len(shape) - 1, -1, -1))
+    for d in dims:
+        if shape[d] % axes_size == 0 and shape[d] >= axes_size:
+            spec = [None] * len(shape)
+            spec[d] = axes
+            return P(*lead, *spec)
+    return P(*lead, *([None] * len(shape)))
+
+
+def param_shardings(mesh: Mesh, param_specs: Any, mode: str = "tp"):
+    """NamedSharding pytree matching a params (or ShapeDtypeStruct) tree.
+
+    mode="tp": megatron tensor-parallel over "model" (baseline).
+    mode="fsdp": ZeRO-3 over flattened ("data","model") -- see SSPerf."""
+    mp = model_size(mesh)
+    fsdp_axes = ("data", "model")
+    fsdp_size = mesh.shape["data"] * mesh.shape["model"]
+
+    def rule(path, leaf):
+        stacked = any("blocks" in _key_str(e) for e in path)
+        if mode == "fsdp":
+            return NamedSharding(mesh, _fsdp_pspec(path, leaf, fsdp_axes,
+                                                   fsdp_size, stacked))
+        return NamedSharding(mesh, _param_pspec(path, leaf, mp, stacked))
+
+    return jax.tree_util.tree_map_with_path(rule, param_specs)
+
+
+def _key_str(entry) -> str:
+    return str(getattr(entry, "key", getattr(entry, "name", "")))
+
+
+def train_state_shardings(mesh: Mesh, state_specs: Any, mode: str = "tp"):
+    """TrainState: params + AdamW moments share the param rules; scalars
+    replicate."""
+    mp = model_size(mesh)
+    fsdp_axes = ("data", "model")
+    fsdp_size = mesh.shape["data"] * mesh.shape["model"]
+
+    def rule(path, leaf):
+        names = [_key_str(e) for e in path]
+        if leaf.ndim == 0 or "count" in names or "step" in names:
+            return NamedSharding(mesh, P())
+        stacked = any("blocks" in n for n in names)
+        if mode == "fsdp":
+            return NamedSharding(mesh, _fsdp_pspec(path, leaf, fsdp_axes,
+                                                   fsdp_size, stacked))
+        return NamedSharding(mesh, _param_pspec(path, leaf, mp, stacked))
+
+    return jax.tree_util.tree_map_with_path(rule, state_specs)
+
+
+def batch_shardings(mesh: Mesh, batch_specs: Any, mode: str = "tp"):
+    """tokens/labels (B, S) -> P(dp, None); frontend (B, T, d) likewise.
+    mode="fsdp": batch shards over ("data","model") (+"pod" when divisible)
+    since no axis carries tensor parallelism."""
+    if mode == "fsdp":
+        dp = tuple(mesh.axis_names)  # ("pod",)?+("data","model")
+    else:
+        dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if mode == "fsdp":
+        # try widest first, fall back to ("data","model")
+        alt = ("data", "model")
+        alt_size = mesh.shape["data"] * mesh.shape["model"]
+
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        first = dp if (b % dp_size == 0 and b >= dp_size) else None
+        if first is None and mode == "fsdp" and b % alt_size == 0 \
+                and b >= alt_size:
+            first = alt
+        return NamedSharding(mesh, P(first, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_specs)
+
+
+def cache_shardings(mesh: Mesh, cache_specs: Any):
+    """Decode caches. Leaves are (L, B, ...) stacked:
+      k/v/c_kv/k_rope/cross_*: (L, B, S, ...) -> seq on "model", B on data
+      ssm state (L, B, H, P, N): head-dim P on "model" when divisible
+      conv/pos: batch-sharded only / replicated."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    mp = model_size(mesh)
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name == "pos" or leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        bdim = dp if (shape[1] % dp_size == 0 and shape[1] >= dp_size) \
+            else None
+        if name in ("k", "v", "c_kv", "k_rope", "cross_k", "cross_v"):
+            sdim = "model" if shape[2] % mp == 0 and shape[2] >= mp else None
+            rest = [None] * (leaf.ndim - 3)
+            return NamedSharding(mesh, P(None, bdim, sdim, *rest))
+        if name == "ssm":                       # (L, B, H, P, N)
+            if shape[2] % mp == 0 and shape[2] >= mp:
+                return NamedSharding(mesh, P(None, bdim, "model", None, None))
+            if shape[3] % mp == 0 and shape[3] >= mp:
+                return NamedSharding(mesh, P(None, bdim, None, "model", None))
+            return NamedSharding(mesh, P(None, bdim, None, None, None))
+        if name == "conv":                      # (L, B, K-1, C)
+            return NamedSharding(mesh, P(None, bdim, None, None))
+        return NamedSharding(mesh, P(None, bdim,
+                                     *([None] * (leaf.ndim - 2))))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs)
+
+
+def replicated(mesh: Mesh, tree: Any):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,11 @@
+"""LM-family model stack for the assigned architectures.
+
+Pure-functional JAX (no flax): parameters are nested dict pytrees,
+layer stacks are ``lax.scan`` over stacked (L, ...) weights so HLO size and
+compile time stay bounded at 512 devices. See repro.models.model for the
+public entry points (init_params / forward_train / prefill / decode_step).
+"""
+
+from repro.models.model import (Model, build_model)
+
+__all__ = ["Model", "build_model"]

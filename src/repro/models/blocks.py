@@ -1,0 +1,231 @@
+"""Decoder/encoder blocks for all assigned families, in scan-stackable form.
+
+A "block" is (init, forward, decode) over a params dict whose leaves can be
+stacked with a leading layer axis and driven by ``lax.scan`` (see
+transformer.py). Families:
+
+  dense   pre-norm attn + gated MLP           (mistral/gemma/starcoder/qwen/
+                                               pixtral backbone)
+  moe     pre-norm attn (or MLA) + MoE         (granite, deepseek)
+  ssm     mamba2 mixer only                    (mamba2-130m; d_ff = 0)
+  hybrid  parallel attn + ssm heads, then MLP  (hymba)
+  enc     bidirectional attn + MLP             (whisper encoder)
+  xdec    causal self-attn + cross-attn + MLP  (whisper decoder)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import attention as A
+from repro.models.layers import mla as MLA
+from repro.models.layers import ssm as S
+from repro.models.layers.basic import rms_norm
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.moe import init_moe, moe
+
+
+def _attn_kwargs(cfg: ArchConfig) -> Dict[str, Any]:
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                qk_norm=cfg.qk_norm, sliding_window=cfg.sliding_window)
+
+
+def _mla_kwargs(cfg: ArchConfig) -> Dict[str, Any]:
+    return dict(n_heads=cfg.n_heads, q_lora=cfg.q_lora_rank,
+                kv_lora=cfg.kv_lora_rank, rope_d=cfg.qk_rope_dim,
+                nope_d=cfg.qk_nope_dim, v_d=cfg.v_head_dim)
+
+
+# ------------------------------------------------------------------ init --
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.ones((d,), jnp.float32)}
+    if kind == "ssm":
+        p["ssm"] = S.init_ssm(ks[0], d, cfg.d_inner, cfg.ssm_state,
+                              cfg.ssm_head_p)
+        return p
+    if kind == "hybrid":
+        p["attn"] = A.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, cfg.qk_norm)
+        p["ssm"] = S.init_ssm(ks[3], d, cfg.d_inner, cfg.ssm_state,
+                              cfg.ssm_head_p)
+    elif cfg.mla and kind in ("dense", "moe"):
+        p["attn"] = MLA.init_mla(ks[0], d, **_mla_kwargs(cfg))
+    else:
+        p["attn"] = A.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, cfg.qk_norm)
+    p["ln2"] = jnp.ones((d,), jnp.float32)
+    if kind == "moe":
+        p["moe"] = init_moe(ks[1], d, cfg.n_experts, cfg.d_ff,
+                            cfg.n_shared_experts, cfg.d_ff)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, gated=True)
+    return p
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "attn": A.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "mlp": init_mlp(ks[1], d, cfg.d_ff, gated=False),
+    }
+
+
+def init_xdec_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "attn": A.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim),
+        "lnx": jnp.ones((d,), jnp.float32),
+        "xattn": A.init_cross_attention(ks[1], d, cfg.n_heads,
+                                        cfg.resolved_head_dim),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, gated=False),
+    }
+
+
+# --------------------------------------------------------------- forward --
+
+def block_forward(p, x, positions, cfg: ArchConfig, kind: str,
+                  causal: bool = True):
+    """Full-sequence pass. Returns (x, cache, aux) where cache is the
+    layer's decode state seed and aux = (lb_loss, z_loss) zeros if non-moe."""
+    zero_aux = (jnp.float32(0.0), jnp.float32(0.0))
+    h = rms_norm(p["ln1"], x)
+    if kind == "ssm":
+        out, (ssm_state, conv_state) = S.ssm_forward(
+            p["ssm"], h, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+            head_p=cfg.ssm_head_p)
+        return x + out, {"ssm": ssm_state, "conv": conv_state}, zero_aux
+    if kind == "hybrid":
+        a_out, (k, v) = A.attn_forward(p["attn"], h, positions,
+                                       causal=causal, **_attn_kwargs(cfg))
+        s_out, (ssm_state, conv_state) = S.ssm_forward(
+            p["ssm"], h, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+            head_p=cfg.ssm_head_p)
+        x = x + 0.5 * (a_out + s_out)
+        # ring-buffer KV seed: slot(p) = p % W (see attn_decode_ring)
+        w = cfg.sliding_window
+        s_len = k.shape[1]
+        if s_len >= w:
+            shift = (s_len - w) % w
+            rk = jnp.roll(k[:, -w:], shift, axis=1)
+            rv = jnp.roll(v[:, -w:], shift, axis=1)
+            rpos = jnp.roll(jnp.arange(s_len - w, s_len, dtype=jnp.int32),
+                            shift)
+        else:
+            pad = w - s_len
+            rk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            rv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            rpos = jnp.pad(jnp.arange(s_len, dtype=jnp.int32), (0, pad),
+                           constant_values=-1)
+        cache = {"k": rk, "v": rv, "pos": rpos,
+                 "ssm": ssm_state, "conv": conv_state}
+    elif cfg.mla:
+        a_out, (c_kv, k_rope) = MLA.mla_forward(p["attn"], h, positions,
+                                                **_mla_kwargs(cfg))
+        x = x + a_out
+        cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        a_out, (k, v) = A.attn_forward(p["attn"], h, positions,
+                                       causal=causal, **_attn_kwargs(cfg))
+        x = x + a_out
+        cache = {"k": k, "v": v}
+    h2 = rms_norm(p["ln2"], x)
+    if kind == "moe":
+        m_out, aux = moe(p["moe"], h2, n_experts=cfg.n_experts,
+                         top_k=cfg.experts_per_token, act=cfg.mlp_act,
+                         dispatch=cfg.moe_dispatch)
+        return x + m_out, cache, aux
+    return x + mlp(p["mlp"], h2, act=cfg.mlp_act), cache, zero_aux
+
+
+def block_decode(p, x1, cache, pos, cfg: ArchConfig, kind: str):
+    """One-token decode. Returns (x1, new_cache)."""
+    h = rms_norm(p["ln1"], x1)
+    if kind == "ssm":
+        out, ssm_state, conv_state = S.ssm_decode(
+            p["ssm"], h, cache["ssm"], cache["conv"],
+            d_inner=cfg.d_inner, d_state=cfg.ssm_state, head_p=cfg.ssm_head_p)
+        return x1 + out, {"ssm": ssm_state, "conv": conv_state}
+    if kind == "hybrid":
+        a_out, ck, cv, cpos = A.attn_decode_ring(
+            p["attn"], h, cache["k"], cache["v"], cache["pos"], pos,
+            **_attn_kwargs(cfg))
+        s_out, ssm_state, conv_state = S.ssm_decode(
+            p["ssm"], h, cache["ssm"], cache["conv"],
+            d_inner=cfg.d_inner, d_state=cfg.ssm_state, head_p=cfg.ssm_head_p)
+        x1 = x1 + 0.5 * (a_out + s_out)
+        cache = {"k": ck, "v": cv, "pos": cpos,
+                 "ssm": ssm_state, "conv": conv_state}
+    elif cfg.mla:
+        a_out, c_kv, k_rope = MLA.mla_decode(p["attn"], h, cache["c_kv"],
+                                             cache["k_rope"], pos,
+                                             **_mla_kwargs(cfg))
+        x1 = x1 + a_out
+        cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        a_out, ck, cv = A.attn_decode(p["attn"], h, cache["k"], cache["v"],
+                                      pos, **_attn_kwargs(cfg))
+        x1 = x1 + a_out
+        cache = {"k": ck, "v": cv}
+    h2 = rms_norm(p["ln2"], x1)
+    if kind == "moe":
+        m_out, _ = moe(p["moe"], h2, n_experts=cfg.n_experts,
+                       top_k=cfg.experts_per_token, act=cfg.mlp_act,
+                       dispatch=cfg.moe_dispatch)
+        return x1 + m_out, cache
+    return x1 + mlp(p["mlp"], h2, act=cfg.mlp_act), cache
+
+
+def enc_block_forward(p, x, positions, cfg: ArchConfig):
+    h = rms_norm(p["ln1"], x)
+    out, _ = A.attn_forward(p["attn"], h, positions, causal=False,
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=cfg.resolved_head_dim,
+                            rope_theta=cfg.rope_theta)
+    x = x + out
+    return x + mlp(p["mlp"], rms_norm(p["ln2"], x), act=cfg.mlp_act)
+
+
+def xdec_block_forward(p, x, positions, enc_k, enc_v, cfg: ArchConfig):
+    """Whisper decoder full-seq pass; returns (x, self_cache)."""
+    h = rms_norm(p["ln1"], x)
+    a_out, (k, v) = A.attn_forward(p["attn"], h, positions, causal=True,
+                                   n_heads=cfg.n_heads,
+                                   n_kv_heads=cfg.n_kv_heads,
+                                   head_dim=cfg.resolved_head_dim,
+                                   rope_theta=cfg.rope_theta)
+    x = x + a_out
+    x = x + A.cross_attn(p["xattn"], rms_norm(p["lnx"], x), enc_k, enc_v,
+                         n_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim)
+    return x + mlp(p["mlp"], rms_norm(p["ln2"], x), act=cfg.mlp_act), \
+        {"k": k, "v": v}
+
+
+def xdec_block_decode(p, x1, cache, enc_k, enc_v, pos, cfg: ArchConfig):
+    h = rms_norm(p["ln1"], x1)
+    a_out, ck, cv = A.attn_decode(p["attn"], h, cache["k"], cache["v"], pos,
+                                  n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads,
+                                  head_dim=cfg.resolved_head_dim,
+                                  rope_theta=cfg.rope_theta)
+    x1 = x1 + a_out
+    x1 = x1 + A.cross_attn(p["xattn"], rms_norm(p["lnx"], x1), enc_k, enc_v,
+                           n_heads=cfg.n_heads,
+                           head_dim=cfg.resolved_head_dim)
+    x1 = x1 + mlp(p["mlp"], rms_norm(p["ln2"], x1), act=cfg.mlp_act)
+    return x1, {"k": ck, "v": cv}

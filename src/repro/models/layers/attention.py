@@ -1,0 +1,204 @@
+"""Attention: GQA/MQA/MHA + RoPE + optional qk-norm + sliding window +
+cross-attention, with three lowering modes:
+
+  * ``attn_forward``  -- full-sequence causal (train / prefill). Queries are
+    processed in blocks via ``lax.scan`` (flash-style O(S * blk) score
+    memory, exact softmax over the full key axis per block) so 32k prefill
+    fits HBM without materializing the S^2 score tensor.
+  * ``attn_decode``   -- one new token against a (B, S, KVH, D) KV cache,
+    written in place at ``pos`` (dynamic_update_slice lands on the owning
+    shard under pjit).
+  * ``cross_attn``    -- decoder-over-encoder (whisper), no mask, static KV.
+
+Layout notes for sharding: projections keep heads fused as (S, H*D) until
+after the matmul so the "model" axis shards the contraction output; the
+(H, D) split happens immediately before the attention einsum, where H (or D,
+resolver's choice) carries the sharding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import apply_rope, dense_init, rms_norm
+
+NEG = -1.0e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qk_norm: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim)),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim)),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * head_dim)),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model)),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((head_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, positions, rope_theta,
+                 qk_norm):
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _gqa_scores_block(qb, k, scale):
+    """qb: (B, Sq, KVH, G, D); k: (B, Sk, KVH, D) -> (B, KVH, G, Sq, Sk)."""
+    return jnp.einsum("bqhgd,bshd->bhgqs", qb.astype(jnp.float32),
+                      k.astype(jnp.float32)) * scale
+
+
+def _attend_block(qb, k, v, mask, scale):
+    s = _gqa_scores_block(qb, k, scale)
+    s = jnp.where(mask, s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", w.astype(v.dtype), v)
+    return out
+
+
+def attn_forward(p, x, positions, *, n_heads, n_kv_heads, head_dim,
+                 rope_theta=1e4, qk_norm=False, causal=True,
+                 sliding_window=0, q_block=512):
+    """Full-sequence attention; returns (out (B,S,d_model-ish), (k, v))."""
+    b, s, _ = x.shape
+    g = n_heads // n_kv_heads
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, positions,
+                           rope_theta, qk_norm)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    qg = q.reshape(b, s, n_kv_heads, g, head_dim)
+    kpos = positions  # (B, S) or (S,)
+    kpos = jnp.broadcast_to(kpos, (b, s)) if kpos.ndim == 1 else kpos
+
+    if s <= q_block:
+        qpos = kpos
+        mask = jnp.ones((b, 1, 1, s, s), bool)
+        if causal:
+            mask = mask & (qpos[:, None, None, :, None]
+                           >= kpos[:, None, None, None, :])
+        if sliding_window > 0:
+            mask = mask & (qpos[:, None, None, :, None] - sliding_window
+                           < kpos[:, None, None, None, :])
+        out = _attend_block(qg, k, v, mask, scale)
+    else:
+        assert s % q_block == 0, (s, q_block)
+        nblk = s // q_block
+        qblocks = qg.reshape(b, nblk, q_block, n_kv_heads, g, head_dim)
+        qpos_blocks = kpos.reshape(b, nblk, q_block)
+
+        def body(_, inp):
+            qb, qpos = inp                       # (B,blk,KVH,G,D), (B,blk)
+            m = jnp.ones((b, 1, 1, q_block, s), bool)
+            if causal:
+                m = m & (qpos[:, None, None, :, None]
+                         >= kpos[:, None, None, None, :])
+            if sliding_window > 0:
+                m = m & (qpos[:, None, None, :, None] - sliding_window
+                         < kpos[:, None, None, None, :])
+            return None, _attend_block(qb, k, v, m, scale)
+
+        _, outb = jax.lax.scan(
+            body, None,
+            (jnp.moveaxis(qblocks, 1, 0), jnp.moveaxis(qpos_blocks, 1, 0)))
+        out = jnp.moveaxis(outb, 0, 1).reshape(b, s, n_kv_heads, g, head_dim)
+
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
+def attn_decode(p, x1, cache_k, cache_v, pos, *, n_heads, n_kv_heads,
+                head_dim, rope_theta=1e4, qk_norm=False, sliding_window=0):
+    """One-token decode. x1: (B, 1, d); cache: (B, S, KVH, D); pos: () int.
+
+    Returns (out (B,1,d_model), new_cache_k, new_cache_v)."""
+    b = x1.shape[0]
+    s_cache = cache_k.shape[1]
+    g = n_heads // n_kv_heads
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x1, n_heads, n_kv_heads, head_dim, positions,
+                           rope_theta, qk_norm)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    kpos = jnp.arange(s_cache, dtype=jnp.int32)
+    valid = kpos <= pos
+    if sliding_window > 0:
+        valid = valid & (kpos > pos - sliding_window)
+    mask = valid[None, None, None, None, :]
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    out = _attend_block(qg, cache_k, cache_v, mask, scale)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    return out @ p["wo"].astype(x1.dtype), cache_k, cache_v
+
+
+def attn_decode_ring(p, x1, cache_k, cache_v, cache_pos, pos, *, n_heads,
+                     n_kv_heads, head_dim, rope_theta=1e4, qk_norm=False,
+                     sliding_window=0):
+    """Sliding-window decode with a ring-buffer cache of width W.
+
+    cache_k/v: (B, W, KVH, D) with RoPE already applied at write time;
+    cache_pos: (W,) absolute positions (-1 = empty). The new token writes at
+    slot ``pos % W`` so cache memory is O(W) however long the stream -- this
+    is what makes ``long_500k`` decodable for the hybrid arch."""
+    b = x1.shape[0]
+    w = cache_k.shape[1]
+    g = n_heads // n_kv_heads
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x1, n_heads, n_kv_heads, head_dim, positions,
+                           rope_theta, qk_norm)
+    slot = jnp.mod(pos, w)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_pos, positions[0, :1], slot, axis=0)
+    valid = (cache_pos >= 0) & (cache_pos <= pos)
+    if sliding_window > 0:
+        valid = valid & (cache_pos > pos - sliding_window)
+    mask = valid[None, None, None, None, :]
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    out = _attend_block(qg, cache_k, cache_v, mask, scale)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    return out @ p["wo"].astype(x1.dtype), cache_k, cache_v, cache_pos
+
+
+def init_cross_attention(key, d_model: int, n_heads: int, head_dim: int):
+    return init_attention(key, d_model, n_heads, n_heads, head_dim)
+
+
+def cross_attn(p, x, enc_k, enc_v, *, n_heads, head_dim):
+    """x: (B, Sq, d); enc_k/enc_v: (B, Se, H, D) precomputed. No mask/RoPE."""
+    b, sq, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, sq, n_heads, head_dim)
+    qg = q.reshape(b, sq, n_heads, 1, head_dim)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    mask = jnp.ones((1, 1, 1, 1, 1), bool)
+    out = _attend_block(qg, enc_k, enc_v, mask, scale)
+    out = out.reshape(b, sq, n_heads * head_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(p, enc_out, *, n_heads, head_dim):
+    b, se, _ = enc_out.shape
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, se, n_heads,
+                                                          head_dim)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, se, n_heads,
+                                                          head_dim)
+    return k, v

@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Projections:
+  q:  x -> c_q (q_lora_rank) -> per-head [q_nope (nope_d) ; q_rope (rope_d)]
+  kv: x -> c_kv (kv_lora_rank)  and  x -> k_rope (rope_d, shared per head)
+      c_kv -> per-head k_nope (nope_d), v (v_d)
+
+Decode caches ONLY (c_kv, k_rope) -- the compressed latent -- and uses the
+*weight absorption* identity so per-step cost is O(S * (kv_lora + rope_d))
+per head instead of re-expanding the whole cache:
+
+  score = q_nope . (c W_uk) + q_rope . k_rope
+        = (q_nope W_uk^T) . c + q_rope . k_rope
+  out_h = (attn . c) W_uv
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import apply_rope, dense_init, rms_norm
+
+NEG = -1.0e30
+
+
+def init_mla(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             rope_d: int, nope_d: int, v_d: int):
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d_model, q_lora)),
+        "q_norm": jnp.ones((q_lora,), jnp.float32),
+        "w_uq": dense_init(ks[1], (q_lora, n_heads * (nope_d + rope_d))),
+        "w_dkv": dense_init(ks[2], (d_model, kv_lora)),
+        "kv_norm": jnp.ones((kv_lora,), jnp.float32),
+        "w_kr": dense_init(ks[3], (d_model, rope_d)),
+        "w_uk": dense_init(ks[4], (kv_lora, n_heads * nope_d)),
+        "w_uv": dense_init(ks[5], (kv_lora, n_heads * v_d)),
+        "wo": dense_init(ks[6], (n_heads * v_d, d_model)),
+    }
+
+
+def _project_q(p, x, n_heads, nope_d, rope_d, positions):
+    b, s, _ = x.shape
+    cq = rms_norm(p["q_norm"], x @ p["w_dq"].astype(x.dtype))
+    q = (cq @ p["w_uq"].astype(x.dtype)).reshape(b, s, n_heads,
+                                                 nope_d + rope_d)
+    q_nope, q_rope = q[..., :nope_d], q[..., nope_d:]
+    q_rope = apply_rope(q_rope, positions, 1e4)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, positions, *, n_heads, q_lora, kv_lora, rope_d, nope_d,
+                v_d, q_block=512):
+    """Full-sequence causal MLA. Returns (out, (c_kv, k_rope)) for caching."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(p, x, n_heads, nope_d, rope_d, positions)
+    c_kv = rms_norm(p["kv_norm"], x @ p["w_dkv"].astype(x.dtype))  # (B,S,ckv)
+    k_rope = apply_rope((x @ p["w_kr"].astype(x.dtype))[:, :, None, :],
+                        positions, 1e4)[:, :, 0]                    # (B,S,rd)
+    k_nope = (c_kv @ p["w_uk"].astype(x.dtype)).reshape(b, s, n_heads, nope_d)
+    v = (c_kv @ p["w_uv"].astype(x.dtype)).reshape(b, s, n_heads, v_d)
+    scale = 1.0 / jnp.sqrt(jnp.float32(nope_d + rope_d))
+    kpos = jnp.broadcast_to(positions, (b, s)) if positions.ndim == 1 \
+        else positions
+
+    def attend(qn, qr, qpos):
+        sc = (jnp.einsum("bqhd,bkhd->bhqk", qn.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", qr.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+        mask = qpos[:, None, :, None] >= kpos[:, None, None, :]
+        sc = jnp.where(mask, sc, NEG)
+        w = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+    if s <= q_block:
+        out = attend(q_nope, q_rope, kpos)
+    else:
+        assert s % q_block == 0
+        nb = s // q_block
+        def body(_, inp):
+            qn, qr, qp = inp
+            return None, attend(qn, qr, qp)
+        _, ob = jax.lax.scan(body, None, (
+            jnp.moveaxis(q_nope.reshape(b, nb, q_block, n_heads, nope_d), 1, 0),
+            jnp.moveaxis(q_rope.reshape(b, nb, q_block, n_heads, rope_d), 1, 0),
+            jnp.moveaxis(kpos.reshape(b, nb, q_block), 1, 0)))
+        out = jnp.moveaxis(ob, 0, 1).reshape(b, s, n_heads, v_d)
+    out = out.reshape(b, s, n_heads * v_d)
+    return out @ p["wo"].astype(x.dtype), (c_kv, k_rope)
+
+
+def mla_decode(p, x1, cache_c, cache_kr, pos, *, n_heads, q_lora, kv_lora,
+               rope_d, nope_d, v_d):
+    """Absorbed one-token decode. cache_c: (B,S,kv_lora); cache_kr: (B,S,rd)."""
+    b = x1.shape[0]
+    s_cache = cache_c.shape[1]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope = _project_q(p, x1, n_heads, nope_d, rope_d, positions)
+    c_new = rms_norm(p["kv_norm"], x1 @ p["w_dkv"].astype(x1.dtype))
+    kr_new = apply_rope((x1 @ p["w_kr"].astype(x1.dtype))[:, :, None, :],
+                        positions, 1e4)[:, :, 0]
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, c_new.astype(cache_c.dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new.astype(cache_kr.dtype), pos, axis=1)
+    # absorption: q_abs[h, ckv] = q_nope[h] @ W_uk[h]^T
+    w_uk = p["w_uk"].astype(x1.dtype).reshape(kv_lora, n_heads, nope_d)
+    q_abs = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)        # (B,1,H,ckv)
+    scale = 1.0 / jnp.sqrt(jnp.float32(nope_d + rope_d))
+    sc = (jnp.einsum("bqhc,bkc->bhqk", q_abs.astype(jnp.float32),
+                     cache_c.astype(jnp.float32))
+          + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                       cache_kr.astype(jnp.float32))) * scale
+    kpos = jnp.arange(s_cache)
+    sc = jnp.where((kpos <= pos)[None, None, None, :], sc, NEG)
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhqk,bkc->bqhc", w, cache_c.astype(jnp.float32))
+    w_uv = p["w_uv"].astype(jnp.float32).reshape(kv_lora, n_heads, v_d)
+    out = jnp.einsum("bqhc,chd->bqhd", ctx, w_uv).astype(x1.dtype)
+    out = out.reshape(b, 1, n_heads * v_d)
+    return out @ p["wo"].astype(x1.dtype), cache_c, cache_kr

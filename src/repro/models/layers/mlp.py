@@ -1,0 +1,26 @@
+"""Gated MLPs (SwiGLU / GeGLU) and the plain enc-dec FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import act_fn, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d_model, d_ff)),
+         "w_out": dense_init(ks[1], (d_ff, d_model))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp(p, x, act: str = "silu"):
+    h = x @ p["w_in"].astype(x.dtype)
+    if "w_gate" in p:
+        h = act_fn(act)(x @ p["w_gate"].astype(x.dtype)) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ p["w_out"].astype(x.dtype)

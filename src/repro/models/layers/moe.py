@@ -1,0 +1,165 @@
+"""Mixture-of-Experts with top-k routing and grouped-GEMM dispatch.
+
+Dispatch strategy (TPU-native): tokens are replicated-to-(T*topk), sorted by
+assigned expert, and run through ``jax.lax.ragged_dot`` grouped GEMMs -- the
+XLA analogue of a grouped GEMM kernel; FLOPs are exactly the *active* FLOPs
+(6 * N_active * D counts in the roofline use this). No capacity dropping:
+group sizes are data-dependent but the GEMM is dense in total rows, so
+shapes stay static.
+
+Sharding: expert weights are sharded on the *d_ff* dimension over the
+"model" axis (tensor-parallel experts). This avoids all-to-all dispatch
+entirely -- every device holds a 1/TP slice of EVERY expert, tokens stay
+put, and the only collective is the same psum as a dense TP MLP. Expert-
+parallel (all_to_all) dispatch is the documented alternative; see
+EXPERIMENTS.md SSPerf for the comparison on the MoE hillclimb cell.
+
+Aux losses: standard load-balance loss (Switch-style) + router z-loss,
+returned for the train step to weight.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import act_fn, dense_init
+
+
+def init_moe(key, d_model: int, n_experts: int, d_ff: int,
+             n_shared: int = 0, shared_d_ff: int = 0):
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), scale=0.02),
+        "w_in": dense_init(ks[1], (n_experts, d_model, d_ff)),
+        "w_gate": dense_init(ks[2], (n_experts, d_model, d_ff)),
+        "w_out": dense_init(ks[3], (n_experts, d_ff, d_model)),
+    }
+    if n_shared > 0:
+        sf = shared_d_ff or d_ff
+        p["shared_w_in"] = dense_init(ks[4], (d_model, n_shared * sf))
+        p["shared_w_gate"] = dense_init(ks[5], (d_model, n_shared * sf))
+        p["shared_w_out"] = dense_init(
+            jax.random.fold_in(key, 7), (n_shared * sf, d_model))
+    return p
+
+
+_SHARD_MESH = {"mesh": None}
+
+
+def set_shard_mesh(mesh) -> None:
+    """Register the mesh used by dispatch='sharded' (launcher calls this
+    before tracing; shard_map needs a concrete mesh object)."""
+    _SHARD_MESH["mesh"] = mesh
+
+
+def _route(p, xt, top_k):
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                        # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return logits, probs, top_p, top_e
+
+
+def _ragged_experts(p_w_in, p_w_gate, p_w_out, xt, top_p, top_e,
+                    n_experts, top_k, act):
+    """Sort-and-group grouped-GEMM dispatch over one token shard."""
+    t, d = xt.shape
+    flat_e = top_e.reshape(-1)                                       # (T*K,)
+    order = jnp.argsort(flat_e)                                      # stable
+    inv = jnp.argsort(order)
+    rows = xt[jnp.repeat(jnp.arange(t), top_k)[order]]               # (T*K, d)
+    group_sizes = jnp.bincount(flat_e, length=n_experts)
+    h_in = jax.lax.ragged_dot(rows, p_w_in, group_sizes)
+    h_gate = jax.lax.ragged_dot(rows, p_w_gate, group_sizes)
+    h = act_fn(act)(h_gate) * h_in
+    out_rows = jax.lax.ragged_dot(h, p_w_out, group_sizes)
+    out_rows = out_rows[inv].reshape(t, top_k, d)
+    return jnp.einsum("tkd,tk->td", out_rows, top_p.astype(xt.dtype))
+
+
+def moe(p, x, *, n_experts: int, top_k: int, act: str = "silu",
+        dispatch: str = "ragged", shard_axes=None):
+    """x: (B, S, d). Returns (out, aux) with aux = (lb_loss, z_loss).
+
+    dispatch:
+      "ragged"  global sort-and-group grouped GEMM (baseline). Correct, but
+                under pjit the global argsort/gather reshards the full token
+                set every layer -- catastrophically collective-bound at pod
+                scale (see EXPERIMENTS.md SSPerf, MoE cell).
+      "dense"   compute ALL experts on all tokens, combine with routing
+                weights. E/top_k x the active FLOPs but zero dispatch
+                communication -- the right trade for few-expert models
+                (granite: E=40, d_ff=512 -> 5x tiny GEMMs beat a global
+                sort by ~50x on the collective term).
+      "sharded" shard_map over ``shard_axes``: tokens stay device-local, the
+                sort-and-group runs per shard (the paper-scale fix for
+                many-expert models, deepseek E=256); expert weights arrive
+                d_ff-sliced, one psum after the down-projection.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits, probs, top_p, top_e = _route(p, xt, top_k)
+
+    if dispatch == "dense":
+        w_full = jax.nn.one_hot(top_e, n_experts, dtype=x.dtype)     # (T,K,E)
+        w_full = jnp.einsum("tke,tk->te", w_full, top_p.astype(x.dtype))
+        h_in = jnp.einsum("td,edf->tef", xt, p["w_in"].astype(x.dtype))
+        h_gate = jnp.einsum("td,edf->tef", xt, p["w_gate"].astype(x.dtype))
+        h = act_fn(act)(h_gate) * h_in
+        out = jnp.einsum("tef,efd,te->td", h, p["w_out"].astype(x.dtype),
+                         w_full)
+    elif dispatch == "sharded":
+        from jax.sharding import PartitionSpec as P
+        # shard_axes = (token_axes, ff_axis): tokens stay on their data
+        # shard (local sort-and-group, NO global dispatch traffic), expert
+        # weights arrive d_ff-sliced on the model axis; the only collective
+        # is the standard TP psum of the (T_loc, d) down-projection output.
+        if shard_axes is None:
+            # derive from the registered mesh (set_shard_mesh): "model"
+            # slices d_ff, every other nontrivial axis carries tokens
+            am = _SHARD_MESH["mesh"]
+            assert am is not None, \
+                "moe dispatch='sharded' needs set_shard_mesh(mesh)"
+            tok_axes = tuple(a for a in am.axis_names
+                             if a != "model" and am.shape[a] > 1) or None
+            ff_axis = "model"
+        else:
+            tok_axes, ff_axis = shard_axes
+            am = _SHARD_MESH["mesh"]
+
+        def local(xt_l, tp_l, te_l, w_in_l, w_gate_l, w_out_l):
+            out_l = _ragged_experts(w_in_l, w_gate_l, w_out_l, xt_l, tp_l,
+                                    te_l, n_experts, top_k, act)
+            return jax.lax.psum(out_l, ff_axis)
+
+        out = jax.shard_map(
+            local, mesh=am,
+            in_specs=(P(tok_axes, None), P(tok_axes, None),
+                      P(tok_axes, None),
+                      P(None, None, ff_axis), P(None, None, ff_axis),
+                      P(None, ff_axis, None)),
+            out_specs=P(tok_axes, None),
+            check_vma=False,
+        )(xt, top_p, top_e, p["w_in"].astype(x.dtype),
+          p["w_gate"].astype(x.dtype), p["w_out"].astype(x.dtype))
+    else:
+        out = _ragged_experts(p["w_in"].astype(x.dtype),
+                              p["w_gate"].astype(x.dtype),
+                              p["w_out"].astype(x.dtype),
+                              xt, top_p, top_e, n_experts, top_k, act)
+
+    if "shared_w_in" in p:
+        hs = (act_fn(act)(xt @ p["shared_w_gate"].astype(x.dtype))
+              * (xt @ p["shared_w_in"].astype(x.dtype)))
+        out = out + hs @ p["shared_w_out"].astype(x.dtype)
+
+    # --- aux losses --------------------------------------------------------
+    # load balance: E * sum_e f_e * P_e  (f = fraction routed, P = mean prob)
+    f = jnp.bincount(top_e.reshape(-1),
+                     length=n_experts).astype(jnp.float32) / (t * top_k)
+    pbar = probs.mean(axis=0)
+    lb_loss = n_experts * jnp.sum(f * pbar)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out.reshape(b, s, d), (lb_loss, z_loss)

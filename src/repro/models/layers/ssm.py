@@ -1,0 +1,160 @@
+"""Mamba-2 (SSD, state-space duality) layer -- arXiv:2405.21060.
+
+Chunked SSD forward (training/prefill): the sequence is split into chunks of
+``chunk`` tokens; within a chunk the quadratic "attention-like" form runs on
+the MXU, across chunks a tiny ``lax.scan`` carries the (H, P, N) state. This
+is the TPU-native formulation: all heavy ops are batched matmuls, the scan
+carry is O(H*P*N) regardless of sequence length -- which is exactly why the
+``long_500k`` shape is runnable for SSM/hybrid archs and skipped for pure
+attention.
+
+Decode: O(1) per token -- h = h * exp(A dt) + dt * (B outer x); y = C . h.
+
+Layout: x is (B, S, d_inner) with d_inner = n_heads * head_p. Sharding puts
+n_heads on "model" when divisible (resolver's job), state N stays local.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.basic import dense_init, rms_norm
+
+CONV_K = 4
+
+
+def init_ssm(key, d_model: int, d_inner: int, d_state: int, head_p: int = 64):
+    n_heads = d_inner // head_p
+    ks = jax.random.split(key, 8)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], (d_model,
+                                   2 * d_inner + 2 * d_state + n_heads)),
+        "conv_w": dense_init(ks[1], (CONV_K, d_inner + 2 * d_state),
+                             scale=0.5),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d_model)),
+    }
+
+
+def _split_proj(p, x, d_inner, d_state, n_heads):
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state],
+                           axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv, kernel CONV_K. xbc: (B, S, C).
+    conv_state: (B, CONV_K-1, C) history for decode; returns (out, new_state)."""
+    w = conv_w.astype(xbc.dtype)                       # (K, C)
+    if conv_state is None:
+        pad = jnp.zeros_like(xbc[:, :CONV_K - 1])
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int):
+    """SSD scan. x: (b,S,H,P); dt: (b,S,H); A: (H,); B,C: (b,S,N).
+    Returns (y (b,S,H,P), final_state (b,H,P,N)). S % chunk == 0."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, n).astype(f32)
+    dA = dtc * A.astype(f32)[None, None, None, :]          # (b,nc,L,h) <= 0
+    cum = jnp.cumsum(dA, axis=2)                           # within-chunk
+    seg_end = cum[:, :, -1]                                # (b,nc,h)
+
+    # intra-chunk (quadratic, masked decay):  L[i,j] = exp(cum_i - cum_j) i>=j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,Lq,Lk,h)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)             # (b,nc,Lq,Lk)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp",
+                         cb, L, dtc, xc)
+
+    # chunk states: S_c = sum_k exp(segend - cum_k) dt_k B_k (x) x_k
+    decay_out = jnp.exp(seg_end[:, :, None, :] - cum)      # (b,nc,L,h)
+    states = jnp.einsum("bckn,bckh,bckh,bckhp->bchpn",
+                        Bc, decay_out, dtc, xc)            # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over nc (the only sequential part)
+    def step(hprev, inp):
+        st, se = inp                                       # (b,h,p,n),(b,h)
+        hnew = hprev * jnp.exp(se)[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), f32)
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_end, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                    # (b,nc,h,p,n)
+
+    # inter-chunk output: y_j += exp(cum_j) C_j . H_{c-1}
+    decay_in = jnp.exp(cum)                                # (b,nc,L,h)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_in, hprevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), hlast
+
+
+def ssm_forward(p, x, *, d_inner: int, d_state: int, head_p: int = 64,
+                chunk: int = 256):
+    """Full-sequence Mamba-2 block body. x: (B, S, d_model).
+    Returns (out, (final_state, conv_state))."""
+    b, s, _ = x.shape
+    n_heads = d_inner // head_p
+    z, xbc, dt = _split_proj(p, x, d_inner, d_state, n_heads)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"])
+    xi, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, s, n_heads, head_p)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, hlast = ssd_chunked(xh, dt, A, B, C, chunk=chunk)
+    y = y[:, :s]
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] \
+        * xi.reshape(b, s, n_heads, head_p)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(p["norm_w"], y * jax.nn.silu(z))
+    return y @ p["w_out"].astype(x.dtype), (hlast, conv_state)
+
+
+def ssm_decode(p, x1, ssm_state, conv_state, *, d_inner: int, d_state: int,
+               head_p: int = 64):
+    """One-token decode. x1: (B,1,d_model); ssm_state: (B,H,P,N);
+    conv_state: (B, CONV_K-1, d_inner+2N). Returns (out, new_ssm, new_conv)."""
+    b = x1.shape[0]
+    n_heads = d_inner // head_p
+    z, xbc, dt = _split_proj(p, x1, d_inner, d_state, n_heads)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_state)
+    xi, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,1,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)[:, 0]                                    # (B,H)
+    xh = xi.reshape(b, n_heads, head_p).astype(jnp.float32)
+    Bf = B[:, 0].astype(jnp.float32)                              # (B,N)
+    new_state = (ssm_state * dA[:, :, None, None]
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh, Bf))
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), new_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x1.dtype)
+    y = rms_norm(p["norm_w"], y * jax.nn.silu(z))
+    return y @ p["w_out"].astype(x1.dtype), new_state, conv_state

@@ -1,0 +1,406 @@
+"""Model assembly: init / train-forward / prefill / decode for every family.
+
+Layer stacks are ``lax.scan`` over parameters stacked on a leading L axis
+(bounded HLO at 512 devices); deepseek's 3 dense lead-in layers form a
+second, separate stack. Each block is wrapped in ``jax.checkpoint`` for the
+training pass (per-layer remat, the production default at these sizes).
+
+Batch dict contract (all optional keys per family):
+  tokens   (B, S)  int32        text tokens (decoder tokens for enc-dec)
+  labels   (B, S)  int32        next-token labels, -1 = masked
+  frontend_embeds (B, T, d)     vlm: patch embeddings (prepended);
+                                audio: encoder frame embeddings
+Decode batch:  tokens (B, 1), pos () int32, plus the cache pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models.layers import attention as A
+from repro.models.layers.basic import (dense_init, embed, init_embedding,
+                                       rms_norm, unembed)
+
+Params = Dict[str, Any]
+
+
+def sinusoidal_positions(s: int, d: int) -> np.ndarray:
+    pos = np.arange(s)[:, None]
+    dim = np.arange(0, d, 2)[None, :] / d
+    ang = pos / (10000.0 ** dim)
+    out = np.zeros((s, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Masked mean cross-entropy; labels -1 are ignored. logits f32."""
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, logz - gold, 0.0)
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom, denom
+
+
+class Model:
+    """Family-polymorphic functional model bound to an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig, act_spec=None):
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        # Optional PartitionSpec pinned onto the residual stream after the
+        # embedding and after every block. Under FSDP this is what forces
+        # GSPMD to all-gather WEIGHTS (302 MB/layer) instead of resharding
+        # ACTIVATIONS (51 GB/layer) -- see EXPERIMENTS.md SSPerf iter 4.
+        self.act_spec = act_spec
+
+    def _constrain(self, x):
+        if self.act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, self.act_spec)
+        return x
+
+    # ------------------------------------------------------------- init --
+
+    def _layer_kinds(self) -> Tuple[str, int, str, int]:
+        """(lead_kind, lead_n, main_kind, main_n)."""
+        cfg = self.cfg
+        if cfg.ssm:
+            return ("ssm", 0, "ssm", cfg.n_layers)
+        if cfg.hybrid:
+            return ("hybrid", 0, "hybrid", cfg.n_layers)
+        if cfg.n_experts > 0:
+            return ("dense", cfg.n_dense_layers, "moe",
+                    cfg.n_layers - cfg.n_dense_layers)
+        return ("dense", 0, "dense", cfg.n_layers)
+
+    def init_params(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_embed, k_lead, k_main, k_head, k_enc, k_mtp = \
+            jax.random.split(key, 6)
+        p: Params = {"embed": init_embedding(k_embed, cfg.padded_vocab,
+                                             cfg.d_model),
+                     "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        lead_kind, lead_n, main_kind, main_n = self._layer_kinds()
+        def stack(key, n, init_fn):
+            return jax.vmap(init_fn)(jax.random.split(key, n))
+        if cfg.enc_dec:
+            p["enc_blocks"] = stack(k_enc, cfg.n_enc_layers,
+                                    lambda k: B.init_enc_block(k, cfg))
+            p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["blocks"] = stack(k_main, cfg.n_layers,
+                                lambda k: B.init_xdec_block(k, cfg))
+        else:
+            if lead_n:
+                p["lead_blocks"] = stack(
+                    k_lead, lead_n, lambda k: B.init_block(k, cfg, lead_kind))
+            p["blocks"] = stack(
+                k_main, main_n, lambda k: B.init_block(k, cfg, main_kind))
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"table": dense_init(
+                k_head, (cfg.padded_vocab, cfg.d_model))}
+        if cfg.mtp:
+            k1, k2 = jax.random.split(k_mtp)
+            p["mtp"] = {"proj": dense_init(k1, (2 * cfg.d_model, cfg.d_model)),
+                        "block": B.init_block(k2, cfg, "dense"),
+                        "norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        return p
+
+    def param_specs(self) -> Params:
+        """ShapeDtypeStruct pytree of all parameters (no allocation)."""
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    # ------------------------------------------------------- embeddings --
+
+    def _embed_inputs(self, params: Params, batch: Dict[str, jax.Array],
+                      pos_offset: int = 0):
+        """Returns (x (B,S,d), positions (B,S), labels-or-None)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, self.dtype)
+        labels = batch.get("labels")
+        if cfg.frontend == "vision" and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(self.dtype)
+            x = jnp.concatenate([fe, x], axis=1)
+            if labels is not None:
+                pad = jnp.full(fe.shape[:2], -1, labels.dtype)
+                labels = jnp.concatenate([pad, labels], axis=1)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(pos_offset, pos_offset + s, dtype=jnp.int32), (b, s))
+        if cfg.rope_theta == 0.0:  # absolute sinusoidal (whisper)
+            x = x + jnp.asarray(sinusoidal_positions(s, cfg.d_model),
+                                self.dtype)[None]
+        return x, positions, labels
+
+    def _unembed(self, params: Params, x: jax.Array) -> jax.Array:
+        head = params["embed"] if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        return unembed(head, x)
+
+    # ----------------------------------------------------------- encode --
+
+    def _encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        s = x.shape[1]
+        x = x + jnp.asarray(sinusoidal_positions(s, cfg.d_model),
+                            self.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                     (x.shape[0], s))
+
+        def body(h, p_l):
+            return B.enc_block_forward(p_l, h, positions, cfg), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return rms_norm(params["enc_norm"], x)
+
+    # ------------------------------------------------------------ train --
+
+    def forward_train(self, params: Params, batch: Dict[str, jax.Array],
+                      *, remat: bool = True):
+        """Returns (loss, metrics dict)."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self._forward_train_encdec(params, batch, remat=remat)
+        x, positions, labels = self._embed_inputs(params, batch)
+        lead_kind, lead_n, main_kind, main_n = self._layer_kinds()
+
+        def make_body(kind):
+            def body(carry, p_l):
+                x, lb, zl = carry
+                fn = functools.partial(B.block_forward, cfg=cfg, kind=kind)
+                if remat:
+                    fn = jax.checkpoint(fn)
+                x, _, (l1, l2) = fn(p_l, x, positions)
+                x = self._constrain(x)
+                return (x, lb + l1, zl + l2), None
+            return body
+
+        carry = (self._constrain(x), jnp.float32(0.0), jnp.float32(0.0))
+        if lead_n:
+            carry, _ = jax.lax.scan(make_body(lead_kind), carry,
+                                    params["lead_blocks"])
+        carry, _ = jax.lax.scan(make_body(main_kind), carry,
+                                params["blocks"])
+        x, lb_loss, z_loss = carry
+        x = rms_norm(params["final_norm"], x)
+        logits = self._unembed(params, x)
+        loss, n_tok = _xent(logits, labels)
+        metrics = {"xent": loss, "n_tokens": n_tok}
+        total = loss
+        if cfg.n_experts:
+            n_moe = main_n
+            metrics["lb_loss"] = lb_loss / n_moe
+            metrics["z_loss"] = z_loss / n_moe
+            total = total + 0.01 * metrics["lb_loss"] \
+                + 1e-3 * metrics["z_loss"]
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(params, x, batch, positions)
+            metrics["mtp_loss"] = mtp_loss
+            total = total + 0.3 * mtp_loss
+        metrics["loss"] = total
+        return total, metrics
+
+    def _mtp_loss(self, params, h, batch, positions):
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+        [h_t ; emb(tok_{t+1})]."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        emb_next = embed(params["embed"], jnp.roll(tokens, -1, axis=1),
+                         self.dtype)
+        z = jnp.concatenate([h.astype(self.dtype), emb_next], axis=-1)
+        z = z @ params["mtp"]["proj"].astype(self.dtype)
+        z, _, _ = B.block_forward(params["mtp"]["block"], z, positions,
+                                  cfg=cfg, kind="dense")
+        z = rms_norm(params["mtp"]["norm"], z)
+        logits = self._unembed(params, z)
+        mtp_labels = jnp.roll(labels, -1, axis=1).at[:, -2:].set(-1)
+        loss, _ = _xent(logits, mtp_labels)
+        return loss
+
+    def _forward_train_encdec(self, params, batch, *, remat: bool = True):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frontend_embeds"])
+        x, positions, labels = self._embed_inputs(params, batch)
+
+        def body(x, p_l):
+            def fn(p_l, x):
+                ek, ev = A.cross_kv(p_l["xattn"], enc_out,
+                                    n_heads=cfg.n_heads,
+                                    head_dim=cfg.resolved_head_dim)
+                out, _ = B.xdec_block_forward(p_l, x, positions, ek, ev, cfg)
+                return out
+            if remat:
+                fn = jax.checkpoint(fn)
+            return fn(p_l, x), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        x = rms_norm(params["final_norm"], x)
+        logits = self._unembed(params, x)
+        loss, n_tok = _xent(logits, labels)
+        return loss, {"xent": loss, "loss": loss, "n_tokens": n_tok}
+
+    # ---------------------------------------------------------- prefill --
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array]):
+        """Full-prompt forward; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self._prefill_encdec(params, batch)
+        x, positions, _ = self._embed_inputs(params, batch)
+        lead_kind, lead_n, main_kind, main_n = self._layer_kinds()
+
+        def make_body(kind):
+            def body(x, p_l):
+                x, cache, _ = B.block_forward(p_l, x, positions, cfg=cfg,
+                                              kind=kind)
+                return x, cache
+            return body
+
+        caches = {}
+        if lead_n:
+            x, caches["lead"] = jax.lax.scan(make_body(lead_kind), x,
+                                             params["lead_blocks"])
+        x, caches["main"] = jax.lax.scan(make_body(main_kind), x,
+                                         params["blocks"])
+        x = rms_norm(params["final_norm"], x)
+        logits = self._unembed(params, x[:, -1:])
+        return logits[:, 0], caches
+
+    def _prefill_encdec(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._encode(params, batch["frontend_embeds"])
+        x, positions, _ = self._embed_inputs(params, batch)
+
+        def body(x, p_l):
+            ek, ev = A.cross_kv(p_l["xattn"], enc_out, n_heads=cfg.n_heads,
+                                head_dim=cfg.resolved_head_dim)
+            out, cache = B.xdec_block_forward(p_l, x, positions, ek, ev, cfg)
+            cache = dict(cache, cross_k=ek, cross_v=ev)
+            return out, cache
+
+        x, caches = jax.lax.scan(body, x, params["blocks"])
+        x = rms_norm(params["final_norm"], x)
+        logits = self._unembed(params, x[:, -1:])
+        return logits[:, 0], {"main": caches}
+
+    # ----------------------------------------------------------- decode --
+
+    def decode_step(self, params: Params, cache, tokens: jax.Array,
+                    pos: jax.Array):
+        """One new token. tokens (B, 1); cache as returned by
+        ``init_cache_specs``/``prefill`` (padded to the serve length).
+        Returns (logits (B, vocab), new cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+        if cfg.rope_theta == 0.0:
+            # absolute sinusoidal at (traced) position `pos` (whisper)
+            dim = jnp.arange(0, cfg.d_model, 2, dtype=jnp.float32) \
+                / cfg.d_model
+            ang = pos.astype(jnp.float32) / (10000.0 ** dim)
+            pe = jnp.zeros((cfg.d_model,), jnp.float32)
+            pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+            x = x + pe.astype(self.dtype)[None, None, :]
+        lead_kind, lead_n, main_kind, main_n = self._layer_kinds()
+        new_cache = {}
+
+        if cfg.enc_dec:
+            def body(x1, inp):
+                p_l, c_l = inp
+                out, c_new = B.xdec_block_decode(
+                    p_l, x1, c_l, c_l["cross_k"], c_l["cross_v"], pos, cfg)
+                c_new = dict(c_new, cross_k=c_l["cross_k"],
+                             cross_v=c_l["cross_v"])
+                return out, c_new
+            x, new_cache["main"] = jax.lax.scan(
+                body, x, (params["blocks"], cache["main"]))
+        else:
+            def make_body(kind):
+                def body(x1, inp):
+                    p_l, c_l = inp
+                    return B.block_decode(p_l, x1, c_l, pos, cfg, kind)
+                return body
+            if lead_n:
+                x, new_cache["lead"] = jax.lax.scan(
+                    make_body(lead_kind), x,
+                    (params["lead_blocks"], cache["lead"]))
+            x, new_cache["main"] = jax.lax.scan(
+                make_body(main_kind), x, (params["blocks"], cache["main"]))
+
+        x = rms_norm(params["final_norm"], x)
+        logits = self._unembed(params, x)
+        return logits[:, 0], new_cache
+
+    # ------------------------------------------------------ cache specs --
+
+    def _block_cache_spec(self, kind: str, b: int, s: int):
+        cfg = self.cfg
+        dt = self.dtype
+        kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        if kind == "ssm":
+            h = cfg.d_inner // cfg.ssm_head_p
+            return {
+                "ssm": jax.ShapeDtypeStruct(
+                    (b, h, cfg.ssm_head_p, cfg.ssm_state), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(
+                    (b, 3, cfg.d_inner + 2 * cfg.ssm_state), dt)}
+        if kind == "hybrid":
+            w = cfg.sliding_window
+            h = cfg.d_inner // cfg.ssm_head_p
+            return {
+                "k": jax.ShapeDtypeStruct((b, w, kvh, hd), dt),
+                "v": jax.ShapeDtypeStruct((b, w, kvh, hd), dt),
+                "pos": jax.ShapeDtypeStruct((w,), jnp.int32),
+                "ssm": jax.ShapeDtypeStruct(
+                    (b, h, cfg.ssm_head_p, cfg.ssm_state), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(
+                    (b, 3, cfg.d_inner + 2 * cfg.ssm_state), dt)}
+        if cfg.mla:
+            return {"c_kv": jax.ShapeDtypeStruct((b, s, cfg.kv_lora_rank), dt),
+                    "k_rope": jax.ShapeDtypeStruct((b, s, cfg.qk_rope_dim),
+                                                   dt)}
+        spec = {"k": jax.ShapeDtypeStruct((b, s, kvh, hd), dt),
+                "v": jax.ShapeDtypeStruct((b, s, kvh, hd), dt)}
+        if cfg.enc_dec:
+            spec["cross_k"] = jax.ShapeDtypeStruct((b, s, cfg.n_heads, hd), dt)
+            spec["cross_v"] = jax.ShapeDtypeStruct((b, s, cfg.n_heads, hd), dt)
+        return spec
+
+    def init_cache_specs(self, batch_size: int, seq_len: int):
+        """ShapeDtypeStruct pytree for the decode cache at serve length."""
+        lead_kind, lead_n, main_kind, main_n = self._layer_kinds()
+        def stack(spec_tree, n):
+            return jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype),
+                spec_tree)
+        out = {"main": stack(self._block_cache_spec(main_kind, batch_size,
+                                                    seq_len), main_n)}
+        if lead_n:
+            out["lead"] = stack(self._block_cache_spec(lead_kind, batch_size,
+                                                       seq_len), lead_n)
+        return out
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        """Zero-initialized cache (hybrid 'pos' slots = -1)."""
+        def mk(sd: jax.ShapeDtypeStruct):
+            return jnp.zeros(sd.shape, sd.dtype)
+        cache = jax.tree.map(mk, self.init_cache_specs(batch_size, seq_len))
+        if self.cfg.hybrid:
+            cache["main"]["pos"] = jnp.full_like(cache["main"]["pos"], -1)
+        return cache
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,275 @@
+"""Roofline term derivation from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh) cell, per the harness spec:
+
+    compute    = HLO_FLOPs      / (peak_FLOP/s)        [per chip]
+    memory     = HLO_bytes      / (HBM_bw)             [per chip]
+    collective = collective_B   / (link_bw)            [per chip]
+
+``compiled.cost_analysis()`` reports the SPMD-partitioned module, i.e.
+*per-device* flops/bytes -- the roofline divides by per-chip peaks, no
+further /chips needed. Collective bytes are NOT in cost_analysis: we parse
+``compiled.as_text()`` (post-partitioning HLO) and sum the *result shapes*
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (bytes-through-the-link proxy; all-reduce counts 2x for
+the reduce+broadcast halves of a ring).
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the harness spec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+    hbm_bytes: float = 16e9           # v5e capacity
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*"
+                       r"body=%?([\w.\-]+)")
+_INT_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    """Name -> body lines. A computation head is any top-level line ending
+    with '{' whose first token is the computation name (possibly after
+    'ENTRY'). Tuple-typed parameter lists may contain nested parens, so no
+    attempt is made to parse the signature."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and not s.startswith("HloModule"):
+                toks = s.split()
+                if not toks:
+                    continue
+                name = toks[1] if toks[0] == "ENTRY" and len(toks) > 1 \
+                    else toks[0]
+                name = name.lstrip("%").split("(")[0].rstrip(",")
+                if name:
+                    cur = name
+                    comps[cur] = []
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _local_collectives(lines) -> Dict[str, float]:
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in lines:
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        for kind in _COLLECTIVES:
+            # find the op-use site (name followed by '('), searching after
+            # '=' so lhs value names like %all-reduce.183 don't match
+            pos, is_start, skip = -1, False, False
+            i = line.find(kind, eq)
+            while i >= 0:
+                after = line[i + len(kind):]
+                if after.startswith("("):
+                    pos = i
+                    break
+                if after.startswith("-start("):
+                    pos, is_start = i, True
+                    break
+                if after.startswith("-done"):
+                    skip = True     # async pair counted at -start
+                    break
+                i = line.find(kind, i + 1)
+            if skip:
+                break
+            if pos < 0:
+                continue
+            head = line[eq + 1:pos]
+            total = sum(_shape_bytes(dt, dims)
+                        for dt, dims in _SHAPE_RE.findall(head))
+            if is_start:
+                total //= 2     # async form: (operand, result) tuple on lhs
+            if kind == "all-reduce":
+                total *= 2      # ring all-reduce moves ~2x the payload
+            out[kind] += float(total)
+            break
+    return out
+
+
+def _trip_count(cond_lines) -> float:
+    """Trip count of a while loop from its condition computation: the
+    largest integer literal compared against (scan counters compare the
+    induction variable with constant(length))."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _INT_CONST_RE.finditer(line)]
+    return float(max(consts)) if consts else 1.0
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Collective bytes from post-SPMD HLO text, scan/while-aware.
+
+    XLA keeps each while body as ONE computation regardless of trip count,
+    so collectives inside scan-stacked layers must be multiplied by the
+    loop's trip count (recovered from the paired condition computation's
+    integer constant). Nested whiles multiply through.
+    """
+    comps = _split_computations(hlo_text)
+    local = {name: _local_collectives(lines) for name, lines in comps.items()}
+    # while edges: computation -> [(cond, body)]
+    edges: Dict[str, list] = {name: [] for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                edges[name].append((m.group(1), m.group(2)))
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in comps:
+            return {k: 0.0 for k in _COLLECTIVES}
+        acc = dict(local.get(name, {k: 0.0 for k in _COLLECTIVES}))
+        for cond, body in edges.get(name, []):
+            trips = _trip_count(comps.get(cond, []))
+            sub = total(body, depth + 1)
+            for k in _COLLECTIVES:
+                acc[k] = acc.get(k, 0.0) + trips * sub.get(k, 0.0)
+        memo[name] = acc
+        return acc
+
+    # entry = computation not referenced as body/cond of any while and not a
+    # fusion; robust fallback: sum over roots (computations never used as a
+    # while body/cond).
+    used = {c for lst in edges.values() for pair in lst for c in pair}
+    roots = [n for n in comps if n not in used]
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for r in roots:
+        t = total(r)
+        for k in _COLLECTIVES:
+            out[k] += t.get(k, 0.0)
+    out["total"] = float(sum(out[k] for k in _COLLECTIVES))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                 # per-device logical flops (jaxpr walk)
+    hbm_bytes: float             # per-device traffic (jaxpr walk + weights)
+    coll_bytes: float            # per-device collective bytes (HLO walk)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float           # 6*N(_active)*D (train) / 2*N*D (serve)
+    useful_ratio: float          # model_flops / global logical flops
+    coll_breakdown: Dict[str, float]
+    xla_flops_once: float = 0.0  # raw cost_analysis (scan bodies counted 1x)
+    memory_per_device: Optional[dict] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, *, n_devices: int,
+                     logical_flops: float = 0.0,
+                     logical_bytes: float = 0.0,
+                     param_bytes: float = 0.0,
+                     model_axis: int = 1,
+                     model_flops_global: float = 0.0,
+                     hw: HW = HW()) -> RooflineReport:
+    """Roofline terms for one compiled cell.
+
+    logical_flops/bytes: GLOBAL counts from the jaxpr walker (exact w.r.t.
+    scan trip counts). param_bytes: total parameter bytes -- every step
+    streams the (model-axis-sharded) weights from HBM at least once, which
+    the /n_devices division would otherwise hide from the memory term.
+    """
+    cost = compiled.cost_analysis()
+    xla_flops = float(cost.get("flops", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    flops_dev = logical_flops / n_devices
+    bytes_dev = logical_bytes / n_devices + param_bytes / max(model_axis, 1)
+    t_c = flops_dev / hw.peak_flops
+    t_m = bytes_dev / hw.hbm_bw
+    t_x = coll["total"] / hw.link_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops_global / logical_flops
+              if logical_flops > 0 and model_flops_global > 0 else 0.0)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_ok_16GB": bool(ma.temp_size_in_bytes
+                                 + ma.argument_size_in_bytes < hw.hbm_bytes),
+        }
+    except Exception:
+        pass
+    return RooflineReport(
+        flops=flops_dev, hbm_bytes=bytes_dev, coll_bytes=coll["total"],
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bottleneck,
+        model_flops=model_flops_global, useful_ratio=useful,
+        coll_breakdown=coll, xla_flops_once=xla_flops,
+        memory_per_device=mem)
+
+
+def model_flops(param_specs: Any, n_tokens: float, *, cfg=None,
+                kind: str = "train") -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE), D = processed tokens.
+
+    kind: train -> 6ND (fwd+bwd); prefill/decode -> 2ND (fwd only).
+    Expert leaves (3-D, leading dim = n_experts) are scaled by the active
+    fraction (top_k + shared) / n_experts.
+    """
+    import jax
+
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_specs)[0]:
+        n = float(np.prod(leaf.shape))
+        names = "/".join(str(getattr(p, "key", p)) for p in path)
+        if cfg is not None and cfg.n_experts and leaf.ndim >= 3 and \
+                ("moe" in names and "shared" not in names
+                 and "router" not in names):
+            # stacked experts: (L, E, a, b) or (E, a, b)
+            frac = cfg.experts_per_token / cfg.n_experts
+            n *= frac
+        total += n
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * total * n_tokens

@@ -1,0 +1,153 @@
+"""Jaxpr-level FLOP / memory-traffic counter (scan- and while-aware).
+
+Why not ``compiled.cost_analysis()``: XLA's aggregate cost analysis counts
+each ``while`` body ONCE, so scan-stacked layer stacks (the only way to keep
+HLO bounded at 512 devices) undercount by a factor of n_layers. The jaxpr
+still carries static trip counts, so walking it gives exact logical counts:
+
+  flops:
+    dot_general     2 * prod(batch) * M * N * K        (FMA = 2)
+    conv            2 * out_elems * kernel_elems_per_out
+    elementwise/reduce: 1 per output element (unary/binary alike)
+    scan            body * length;  while: body * trips_hint
+  bytes (perfect-fusion traffic model -- optimistic lower bound, documented):
+    dot/conv        lhs + rhs + out
+    gather/scatter/dynamic-(update-)slice/sort/top_k: in + out
+    reduce/cumsum   in + out
+    scan            (consts + carry) * length + xs + ys   (carry re-written
+                    every iteration; xs/ys stream once)
+    elementwise     0 (assumed fused into a producer)
+
+Counts are GLOBAL (logical, pre-SPMD); callers divide by the device count
+under the perfect-sharding assumption and should treat per-device numbers
+as optimistic where the sharding resolver fell back to replication (those
+cells are flagged by the resolver).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __add__(self, o: "Cost") -> "Cost":
+        return Cost(self.flops + o.flops, self.bytes + o.bytes)
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k)
+
+
+def _nbytes(aval) -> float:
+    if not hasattr(aval, "shape"):
+        return 0.0
+    return float(np.prod(aval.shape, dtype=np.float64)
+                 * np.dtype(aval.dtype).itemsize) if aval.shape else \
+        float(np.dtype(aval.dtype).itemsize)
+
+
+def _nelems(aval) -> float:
+    return float(np.prod(aval.shape, dtype=np.float64)) \
+        if getattr(aval, "shape", ()) else 1.0
+
+
+_MEMORY_PRIMS = {
+    "gather", "scatter", "scatter-add", "scatter_add", "dynamic_slice",
+    "dynamic_update_slice", "sort", "top_k", "cumsum", "cumlogsumexp",
+    "cummax", "argmax", "argmin", "iota", "rev", "transpose", "broadcast",
+}
+_REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                 "reduce_and", "reduce_or", "reduce_precision", "argmax",
+                 "argmin"}
+
+
+def _dot_cost(eqn) -> Cost:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = np.prod([lhs.shape[i] for i in lb], dtype=np.float64) if lb else 1
+    k = np.prod([lhs.shape[i] for i in lc], dtype=np.float64) if lc else 1
+    m = np.prod([d for i, d in enumerate(lhs.shape)
+                 if i not in set(lc) | set(lb)], dtype=np.float64)
+    n = np.prod([d for i, d in enumerate(rhs.shape)
+                 if i not in set(rc) | set(rb)], dtype=np.float64)
+    flops = 2.0 * batch * m * n * k
+    byts = _nbytes(lhs) + _nbytes(rhs) + sum(_nbytes(o.aval)
+                                             for o in eqn.outvars)
+    return Cost(flops, byts)
+
+
+def _conv_cost(eqn) -> Cost:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    kernel = np.prod(rhs.shape, dtype=np.float64)
+    out_spatial = np.prod(out.shape, dtype=np.float64)
+    # per output element: one MAC per kernel element / out-channels
+    flops = 2.0 * out_spatial * kernel / max(rhs.shape[-1], 1)
+    byts = sum(_nbytes(v.aval) for v in eqn.invars) + _nbytes(out)
+    return Cost(flops, byts)
+
+
+def jaxpr_cost(jaxpr: core.Jaxpr, *, while_trips: float = 1.0) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total = total + _dot_cost(eqn)
+        elif prim == "conv_general_dilated":
+            total = total + _conv_cost(eqn)
+        elif prim == "scan":
+            body = jaxpr_cost(eqn.params["jaxpr"].jaxpr,
+                              while_trips=while_trips)
+            length = float(eqn.params["length"])
+            n_consts = eqn.params["num_consts"]
+            n_carry = eqn.params["num_carry"]
+            carry_b = sum(_nbytes(v.aval)
+                          for v in eqn.invars[n_consts:n_consts + n_carry])
+            xs_b = sum(_nbytes(v.aval) for v in eqn.invars[n_consts + n_carry:])
+            ys_b = sum(_nbytes(v.aval) for v in eqn.outvars[n_carry:])
+            total = total + body * length
+            total.bytes += carry_b * length + xs_b + ys_b
+        elif prim == "while":
+            body = jaxpr_cost(eqn.params["body_jaxpr"].jaxpr,
+                              while_trips=while_trips)
+            total = total + body * while_trips
+        elif prim == "cond":
+            branches = [jaxpr_cost(b.jaxpr, while_trips=while_trips)
+                        for b in eqn.params["branches"]]
+            # count the most expensive branch
+            total = total + max(branches, key=lambda c: c.flops + c.bytes)
+        elif (inner := (eqn.params.get("jaxpr")
+                        or eqn.params.get("call_jaxpr")
+                        or eqn.params.get("fun_jaxpr"))) is not None:
+            # pjit / remat / remat2 / custom_vjp / closed_call / ...:
+            # any jaxpr-carrying primitive recurses
+            ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            total = total + jaxpr_cost(ij, while_trips=while_trips)
+        elif prim in _REDUCE_PRIMS:
+            total.flops += sum(_nelems(v.aval) for v in eqn.invars)
+            total.bytes += sum(_nbytes(v.aval) for v in eqn.invars) \
+                + sum(_nbytes(o.aval) for o in eqn.outvars)
+        elif prim in _MEMORY_PRIMS:
+            total.bytes += sum(_nbytes(v.aval) for v in eqn.invars
+                               if hasattr(v, "aval")) \
+                + sum(_nbytes(o.aval) for o in eqn.outvars)
+        else:
+            # elementwise & friends: 1 flop/output element, fused (0 bytes)
+            total.flops += sum(_nelems(o.aval) for o in eqn.outvars)
+    return total
+
+
+def trace_cost(fn, *args, while_trips: float = 1.0, **kwargs) -> Cost:
+    """Trace ``fn`` with ShapeDtypeStruct args and count its jaxpr."""
+    closed = jax.make_jaxpr(partial(fn, **kwargs) if kwargs else fn)(*args)
+    return jaxpr_cost(closed.jaxpr, while_trips=while_trips)

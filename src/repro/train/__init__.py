@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.step import TrainState, make_train_step, train_state_specs
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "TrainState",
+           "make_train_step", "train_state_specs"]

@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay, built from scratch (no optax).
+
+Mixed precision: master weights/moments in f32 regardless of compute dtype;
+grads arrive in compute dtype and are upcast. Moments are sharded like their
+parameters (the pjit sharding rules apply pointwise over the state pytree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: AdamWState, *,
+                 lr: float | jax.Array = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0):
+    """Returns (new_params, new_state, grad_norm). Global-norm clipping."""
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(g32)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if grad_clip > 0 else 1.0
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        # decay only matrices (norms/scalars exempt), the usual rule
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(g32)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(new_mu, new_nu, count), gnorm
+
+
+def cosine_lr(step: jax.Array, *, base_lr: float, warmup: int,
+              total: int, min_frac: float = 0.1) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here -- smoke tests and benches see
+the real single CPU device; only launch/dryrun.py forces 512 devices.
+Multi-device shard_map tests spawn a subprocess with the flag instead."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

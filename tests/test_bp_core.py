@@ -1,0 +1,121 @@
+"""Core BP behaviour: exactness on trees, fixed-point agreement across
+schedulers, convergence semantics, serial-parallel parity (paper Fig 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LBP, RBP, RS, RnBP, brute_force_marginals,
+                        kl_divergence, run_bp, run_srbp, ve_marginals)
+from repro.core import messages as M
+from repro.core.graph import build_pgm
+from repro.pgm import (chain_graph, ising_grid, ising_grid_fast,
+                       protein_like_graph, small_ising)
+
+SCHEDULERS = [LBP(), RBP(p=0.1), RS(p=0.1, h=2), RnBP(low_p=0.7)]
+
+
+def _marginals(res, nv, ns=2):
+    return np.exp(np.asarray(res.beliefs, dtype=np.float64))[:nv, :ns]
+
+
+class TestTreeExactness:
+    """BP is exact on trees -- every scheduler must match brute force."""
+
+    @pytest.mark.parametrize("sched", SCHEDULERS,
+                             ids=lambda s: type(s).__name__)
+    def test_chain_exact(self, sched):
+        pgm = chain_graph(12, C=3.0, seed=3)
+        edges = np.stack([np.arange(11), np.arange(1, 12)], 1)
+        # rebuild potentials for the oracle
+        rng = np.random.default_rng(3)
+        unary = [rng.uniform(1e-3, 1.0, size=2) for _ in range(12)]
+        lam = rng.uniform(-0.5, 0.5, size=11)
+        pair = [np.array([[np.exp(l * 3.0), np.exp(-l * 3.0)],
+                          [np.exp(-l * 3.0), np.exp(l * 3.0)]]) for l in lam]
+        exact = brute_force_marginals(12, edges, unary, pair)
+        # eps floor: messages are f32, residuals plateau ~2e-7
+        res = run_bp(pgm, sched, jax.random.key(0), eps=1e-6,
+                     max_rounds=3000)
+        assert bool(res.converged)
+        got = _marginals(res, 12)
+        np.testing.assert_allclose(got, np.stack(exact), atol=2e-4)
+
+
+class TestFixedPointAgreement:
+    """All schedulers converge to the same BP fixed point on loopy graphs."""
+
+    def test_ising_schedulers_agree(self):
+        pgm = ising_grid(8, 2.0, seed=1)
+        results = []
+        for sched in SCHEDULERS:
+            res = run_bp(pgm, sched, jax.random.key(1), eps=1e-6,
+                         max_rounds=5000)
+            assert bool(res.converged), type(sched).__name__
+            results.append(_marginals(res, 64))
+        for r in results[1:]:
+            np.testing.assert_allclose(r, results[0], atol=1e-4)
+
+    def test_serial_parity_fig5(self):
+        """Paper Fig 5: RnBP marginal quality == SRBP vs exact (VE)."""
+        pgm, nv, edges, unary, pairwise = small_ising(6, 2.0, seed=2)
+        exact = ve_marginals(nv, edges, unary, pairwise)
+        res = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(0), eps=1e-6,
+                     max_rounds=4000)
+        sr = run_srbp(pgm, eps=1e-6)
+        assert bool(res.converged) and sr.converged
+        kl_r = [kl_divergence(exact[v], _marginals(res, nv)[v])
+                for v in range(nv)]
+        kl_s = [kl_divergence(exact[v], np.exp(sr.beliefs[v, :2]))
+                for v in range(nv)]
+        # same quality within 10% relative or 1e-4 absolute
+        assert abs(np.mean(kl_r) - np.mean(kl_s)) < max(
+            1e-4, 0.1 * np.mean(kl_s))
+
+
+class TestConvergenceSemantics:
+    def test_unconverged_reported(self):
+        # C=3 hard grid, tiny round budget -> must NOT claim convergence
+        pgm = ising_grid(20, 3.0, seed=0)
+        res = run_bp(pgm, LBP(), jax.random.key(0), eps=1e-5, max_rounds=3)
+        assert not bool(res.converged)
+        assert int(res.rounds) == 3
+
+    def test_history_monotone_rounds(self):
+        pgm = ising_grid(10, 2.0, seed=0)
+        res = run_bp(pgm, LBP(), jax.random.key(0), eps=1e-4,
+                     max_rounds=500)
+        hist = np.asarray(res.unconverged_history)
+        used = hist[hist >= 0]
+        # final round records unconverged==0 without incrementing rounds
+        assert int(res.rounds) <= len(used) <= int(res.rounds) + 1
+        assert used[-1] == 0 or bool(res.converged)
+
+    def test_messages_normalized(self):
+        pgm = protein_like_graph(40, seed=5)
+        res = run_bp(pgm, RnBP(low_p=0.4), jax.random.key(0), eps=1e-4,
+                     max_rounds=2000)
+        logm = np.asarray(res.logm, dtype=np.float64)
+        mask = np.asarray(pgm.state_mask[pgm.edge_dst])
+        emask = np.asarray(pgm.edge_mask)
+        z = np.log(np.sum(np.where(mask, np.exp(logm), 0.0), axis=1))
+        np.testing.assert_allclose(z[emask], 0.0, atol=1e-3)
+
+    def test_beliefs_normalized(self):
+        pgm = ising_grid(6, 2.5, seed=4)
+        res = run_bp(pgm, LBP(), jax.random.key(0), max_rounds=500)
+        b = np.exp(np.asarray(res.beliefs, np.float64))[:36]
+        np.testing.assert_allclose(b.sum(1), 1.0, atol=1e-4)
+
+
+class TestFastBuilder:
+    def test_fast_matches_loop_builder(self):
+        a = ising_grid(7, 2.5, seed=9)
+        b = ising_grid_fast(7, 2.5, seed=9)
+        # same distribution family & shapes; same seed gives same unary sums
+        assert a.n_edges == b.n_edges
+        assert a.n_real_vertices == b.n_real_vertices
+        res_a = run_bp(a, LBP(), jax.random.key(0), max_rounds=500)
+        res_b = run_bp(b, LBP(), jax.random.key(0), max_rounds=500)
+        assert bool(res_a.converged) and bool(res_b.converged)

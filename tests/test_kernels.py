@@ -1,0 +1,152 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracle across
+shape/dtype sweeps + hypothesis property tests on kernel semantics."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import messages as M
+from repro.core.graph import NEG_INF
+from repro.kernels.message_update import fused_update_t, pick_block_edges
+from repro.kernels.ops import make_pallas_update, pallas_update
+from repro.kernels.ref import fused_update_t_ref
+from repro.pgm import ising_grid, protein_like_graph
+
+
+def _rand_operands(rng, s, e, dtype=jnp.float32):
+    logpsi = rng.standard_normal((s, s, e)).astype(np.float32)
+    pre = rng.standard_normal((s, e)).astype(np.float32)
+    # valid-state masks: at least 1 valid state per edge
+    nvalid = rng.integers(1, s + 1, size=e)
+    dmask = (np.arange(s)[:, None] < nvalid[None, :])
+    logm = np.where(dmask, rng.standard_normal((s, e)), NEG_INF)
+    return (jnp.asarray(logpsi, dtype), jnp.asarray(pre, dtype),
+            jnp.asarray(logm, dtype), jnp.asarray(dmask))
+
+
+SHAPES = [(2, 128), (2, 256), (3, 128), (8, 384), (17, 128), (51, 256),
+          (81, 128), (96, 128)]
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("s,e", SHAPES)
+    def test_allclose_f32(self, s, e):
+        rng = np.random.default_rng(s * 1000 + e)
+        ops = _rand_operands(rng, s, e)
+        new_k, r_k = fused_update_t(*ops, interpret=True)
+        new_r, r_r = fused_update_t_ref(*ops)
+        dmask = np.asarray(ops[3])
+        np.testing.assert_allclose(
+            np.where(dmask, np.asarray(new_k), 0.0),
+            np.where(dmask, np.asarray(new_r), 0.0), atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r),
+                                   atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("s,e", [(2, 128), (8, 256)])
+    def test_allclose_bf16_operands(self, s, e):
+        """bf16 messages (serving-precision BP) still match the oracle."""
+        rng = np.random.default_rng(7)
+        ops = _rand_operands(rng, s, e, dtype=jnp.bfloat16)
+        new_k, r_k = fused_update_t(*ops, interpret=True)
+        new_r, r_r = fused_update_t_ref(*ops)
+        dmask = np.asarray(ops[3])
+        np.testing.assert_allclose(
+            np.where(dmask, np.asarray(new_k, np.float32), 0.0),
+            np.where(dmask, np.asarray(new_r, np.float32), 0.0),
+            atol=3e-2, rtol=3e-2)
+
+    def test_unpadded_edge_count(self):
+        """E not a multiple of the block: internal padding must be inert."""
+        rng = np.random.default_rng(11)
+        ops = _rand_operands(rng, 4, 130)  # 130 not a lane multiple
+        new_k, r_k = fused_update_t(*ops, interpret=True)
+        new_r, r_r = fused_update_t_ref(*ops)
+        assert new_k.shape == (4, 130)
+        np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r),
+                                   atol=1e-5)
+
+    def test_block_picker_vmem_budget(self):
+        for s in [2, 8, 32, 81, 96]:
+            blk = pick_block_edges(s)
+            assert blk % 128 == 0 and blk >= 128
+            ws = (s * s + 4 * s + 2) * blk * 4
+            assert ws <= 4 * 1024 * 1024 * 2  # within 2x of budget
+
+
+class TestKernelInBP:
+    def test_pallas_update_equals_ref_update(self):
+        for make in [lambda: ising_grid(12, 2.5, seed=2),
+                     lambda: protein_like_graph(50, seed=2)]:
+            pgm = make()
+            logm = M.init_messages(pgm)
+            for _ in range(2):
+                cand, _ = M.ref_update(pgm, logm)
+                logm = M.apply_frontier(logm, cand, pgm.edge_mask)
+            c_r, r_r = M.ref_update(pgm, logm)
+            c_k, r_k = pallas_update(pgm, logm, interpret=True)
+            mask = np.asarray(pgm.state_mask[pgm.edge_dst])
+            np.testing.assert_allclose(
+                np.where(mask, np.asarray(c_k), 0.0),
+                np.where(mask, np.asarray(c_r), 0.0), atol=1e-5)
+            np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r),
+                                       atol=1e-5)
+
+    def test_e2e_run_bp_with_kernel(self):
+        from repro.core import RnBP, run_bp
+        pgm = ising_grid(10, 2.5, seed=3)
+        r_ref = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(0), eps=1e-5)
+        r_k = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(0), eps=1e-5,
+                     update_fn=make_pallas_update(True))
+        assert int(r_ref.rounds) == int(r_k.rounds)
+        np.testing.assert_allclose(np.asarray(r_ref.beliefs),
+                                   np.asarray(r_k.beliefs), atol=1e-5)
+
+
+class TestKernelProperties:
+    """Hypothesis property tests on the fused-update contract."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(s=st.integers(2, 12), seed=st.integers(0, 2**16),
+           scale=st.floats(0.1, 20.0))
+    def test_output_normalized_and_residual_nonneg(self, s, seed, scale):
+        rng = np.random.default_rng(seed)
+        e = 128
+        logpsi = (scale * rng.standard_normal((s, s, e))).astype(np.float32)
+        pre = (scale * rng.standard_normal((s, e))).astype(np.float32)
+        nvalid = rng.integers(1, s + 1, size=e)
+        dmask = (np.arange(s)[:, None] < nvalid[None, :])
+        logm = np.where(dmask, rng.standard_normal((s, e)), NEG_INF)
+        new, r = fused_update_t(jnp.asarray(logpsi), jnp.asarray(pre),
+                                jnp.asarray(logm.astype(np.float32)),
+                                jnp.asarray(dmask), interpret=True)
+        new = np.asarray(new, np.float64)
+        # (1) normalized over valid states (f32 LSE at scale 20 -> ~1e-3)
+        z = np.sum(np.where(dmask, np.exp(new), 0.0), axis=0)
+        np.testing.assert_allclose(z, 1.0, atol=2e-3)
+        # (2) invalid states carry the log(0) sentinel (f32-rounded)
+        assert np.all(new[~dmask] == np.float64(np.float32(NEG_INF)))
+        # (3) residuals non-negative and finite
+        r = np.asarray(r)
+        assert np.all(r >= 0) and np.all(np.isfinite(r))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_idempotent_at_fixed_point(self, seed):
+        """Feeding back the kernel's own output as messages yields residual
+        == 0 only if inputs unchanged -- here: residual of (new vs new) = 0."""
+        rng = np.random.default_rng(seed)
+        s, e = 4, 128
+        ops = _rand_operands(rng, s, e)
+        new, _ = fused_update_t(*ops, interpret=True)
+        _, r2 = fused_update_t(ops[0], ops[1], new, ops[3], interpret=True)
+        r_self = np.asarray(fused_update_t(ops[0], ops[1], new, ops[3],
+                                           interpret=True)[0])
+        np.testing.assert_allclose(np.asarray(r2),
+                                   np.max(np.where(np.asarray(ops[3]),
+                                                   np.abs(r_self
+                                                          - np.asarray(new)),
+                                                   0.0), axis=0), atol=1e-5)

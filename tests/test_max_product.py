@@ -1,0 +1,76 @@
+"""Max-product (MAP) BP variant: exact on trees, scheduler-agnostic
+(validates the paper's SSV claim that RnBP composes with BP variants)."""
+
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LBP, RnBP, run_bp
+from repro.core import messages as M
+from repro.pgm import chain_graph, small_ising
+
+
+def _brute_force_map(n, edges, unary, pairwise):
+    best, best_score = None, -np.inf
+    for assign in itertools.product(*[range(len(u)) for u in unary]):
+        s = sum(np.log(unary[v][assign[v]]) for v in range(n))
+        s += sum(np.log(pairwise[k][assign[i], assign[j]])
+                 for k, (i, j) in enumerate(edges))
+        if s > best_score:
+            best_score, best = s, assign
+    return np.array(best), best_score
+
+
+class TestMaxProduct:
+    @pytest.mark.parametrize("sched", [LBP(), RnBP(low_p=0.7)],
+                             ids=["LBP", "RnBP"])
+    def test_map_exact_on_small_grid(self, sched):
+        pgm, nv, edges, unary, pairwise = small_ising(3, 2.0, seed=5)
+        res = run_bp(pgm, sched, jax.random.key(0), eps=1e-6,
+                     max_rounds=3000, update_fn=M.max_product_update)
+        assert bool(res.converged)
+        got = np.asarray(M.map_assignment(pgm, res.logm))[:nv]
+        want, want_score = _brute_force_map(nv, edges, unary, pairwise)
+        # compare SCORES (ties in argmax are legitimate)
+        score = sum(np.log(unary[v][got[v]]) for v in range(nv))
+        score += sum(np.log(pairwise[k][got[i], got[j]])
+                     for k, (i, j) in enumerate(edges))
+        np.testing.assert_allclose(score, want_score, rtol=1e-5)
+
+    def test_map_exact_on_chain(self):
+        pgm = chain_graph(30, C=4.0, seed=2)
+        res = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(1), eps=1e-6,
+                     max_rounds=3000, update_fn=M.max_product_update)
+        assert bool(res.converged)
+        # chain MAP via Viterbi (exact DP)
+        rng = np.random.default_rng(2)
+        unary = [rng.uniform(1e-3, 1.0, size=2) for _ in range(30)]
+        lam = rng.uniform(-0.5, 0.5, size=29)
+        pair = [np.log(np.array([[np.exp(l * 4), np.exp(-l * 4)],
+                                 [np.exp(-l * 4), np.exp(l * 4)]]))
+                for l in lam]
+        lu = [np.log(u) for u in unary]
+        dp = lu[0].copy()
+        back = []
+        for t in range(1, 30):
+            cand = dp[:, None] + pair[t - 1]
+            back.append(np.argmax(cand, axis=0))
+            dp = np.max(cand, axis=0) + lu[t]
+        path = [int(np.argmax(dp))]
+        for b in reversed(back):
+            path.append(int(b[path[-1]]))
+        viterbi = np.array(path[::-1])
+        got = np.asarray(M.map_assignment(pgm, res.logm))[:30]
+        np.testing.assert_array_equal(got, viterbi)
+
+    def test_messages_max_normalized(self):
+        pgm, *_ = small_ising(4, 2.5, seed=1)
+        res = run_bp(pgm, LBP(), jax.random.key(0), eps=1e-5,
+                     max_rounds=2000, update_fn=M.max_product_update)
+        logm = np.asarray(res.logm)
+        mask = np.asarray(pgm.state_mask[pgm.edge_dst])
+        em = np.asarray(pgm.edge_mask)
+        mx = np.max(np.where(mask, logm, -np.inf), axis=1)
+        np.testing.assert_allclose(mx[em], 0.0, atol=1e-4)

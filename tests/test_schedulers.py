@@ -1,0 +1,97 @@
+"""Scheduler frontier-selection semantics (paper SSIII-IV) + hypothesis
+property tests on the RnBP dynamic-p controller."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import LBP, RBP, RS, RnBP
+from repro.core import messages as M
+from repro.pgm import ising_grid
+
+
+def _setup(n=8, c=2.5, seed=0):
+    pgm = ising_grid(n, c, seed=seed)
+    logm = M.init_messages(pgm)
+    cand, r = M.ref_update(pgm, logm)
+    return pgm, r
+
+
+class TestFrontiers:
+    def test_lbp_selects_all(self):
+        pgm, r = _setup()
+        f, _ = LBP().select(pgm, r, 1e-3, jax.random.key(0), (), jnp.int32(9))
+        assert bool(jnp.all(f == pgm.edge_mask))
+
+    def test_rbp_topk_size(self):
+        pgm, r = _setup()
+        p = 1 / 16
+        sched = RBP(p=p)
+        f, _ = sched.select(pgm, r, 1e-3, jax.random.key(0), (),
+                            jnp.int32(9))
+        k = int(round(p * pgm.n_real_edges))
+        # threshold semantics admit ties: frontier >= k but not wildly more
+        assert k <= int(f.sum()) <= 4 * k + 8
+        # selected residuals dominate unselected ones
+        rr = np.asarray(r)
+        fm = np.asarray(f)
+        em = np.asarray(pgm.edge_mask)
+        if fm.any() and (~fm & em).any():
+            assert rr[fm].min() >= rr[~fm & em].max() - 1e-6
+
+    def test_rs_splash_is_connected_ball(self):
+        pgm, r = _setup()
+        sched = RS(p=0.05, h=2)
+        f, _ = sched.select(pgm, r, 1e-3, jax.random.key(0), (),
+                            jnp.int32(9))
+        assert int(f.sum()) > 0
+        # frontier edges form h-hop balls: both endpoints in the ball set
+        src = np.asarray(pgm.edge_src)[np.asarray(f)]
+        dst = np.asarray(pgm.edge_dst)[np.asarray(f)]
+        ball = set(src) | set(dst)
+        assert all(s in ball and d in ball for s, d in zip(src, dst))
+
+    def test_rnbp_eps_filter(self):
+        pgm, r = _setup()
+        sched = RnBP(low_p=1.0, high_p=1.0)  # disable the random filter
+        eps = float(np.quantile(np.asarray(r)[np.asarray(pgm.edge_mask)],
+                                0.5))
+        f, _ = sched.select(pgm, r, eps, jax.random.key(0),
+                            sched.init(pgm), jnp.int32(10**9))
+        rr, fm = np.asarray(r), np.asarray(f)
+        assert fm.sum() > 0
+        assert np.all(rr[fm] >= eps)           # filter 1 enforced
+        em = np.asarray(pgm.edge_mask)
+        assert not np.any(fm & ~em)            # padding never selected
+
+
+class TestRnBPController:
+    @settings(max_examples=30, deadline=None)
+    @given(old=st.integers(1, 10**6), new=st.integers(0, 10**6))
+    def test_dynamic_p_rule(self, old, new):
+        """EdgeRatio > 0.9 -> LowP (convergence mode), else HighP."""
+        pgm, r = _setup(6)
+        sched = RnBP(low_p=0.25, high_p=1.0, ratio_threshold=0.9)
+        f, state = sched.select(pgm, r, 0.0, jax.random.key(1),
+                                jnp.float32(old), jnp.int32(new))
+        assert float(state) == float(new)      # carry = new count
+        ratio = new / max(old, 1)
+        em = np.asarray(pgm.edge_mask)
+        frac = np.asarray(f)[em].mean()
+        if ratio > 0.9:
+            assert frac < 0.6                  # ~low_p of candidates
+        else:
+            assert frac > 0.8                  # ~high_p == full frontier
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_random_filter_unbiased(self, seed):
+        pgm, r = _setup(10)
+        sched = RnBP(low_p=0.5, high_p=0.5, ratio_threshold=-1.0)
+        f, _ = sched.select(pgm, r, 0.0, jax.random.key(seed),
+                            sched.init(pgm), jnp.int32(0))
+        em = np.asarray(pgm.edge_mask)
+        frac = np.asarray(f)[em].mean()
+        assert 0.35 < frac < 0.65              # Bernoulli(0.5) concentration

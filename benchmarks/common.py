@@ -65,3 +65,43 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 
 def graph_set(factory: Callable[[int], PGM], n: int) -> List[PGM]:
     return [factory(seed) for seed in range(n)]
+
+
+def mixed_graph_set(n: int, *, grid_lo: int = 6, chain_lo: int = 50,
+                    chain_step: int = 15) -> List[PGM]:
+    """n mixed-size grid/chain graphs with (nearly) all-distinct shapes --
+    the serving-stream workload the batched engine buckets. Half grids of
+    growing side, half chains of growing length."""
+    from repro.pgm import chain_graph, ising_grid
+    half = n // 2
+    return ([ising_grid(grid_lo + i, 2.0, seed=i) for i in range(half)]
+            + [chain_graph(chain_lo + chain_step * i, seed=i)
+               for i in range(n - half)])
+
+
+def time_serving_loop(pgms: Sequence[PGM], scheduler, rng, *,
+                      eps: float = 1e-3, max_rounds: int = 2000) -> float:
+    """Wall time of the naive per-request loop (one ``run_bp`` per graph,
+    blocking each -- exactly what examples/bp_serving.py did pre-batching).
+    Includes any compile time the loop triggers, as serving would."""
+    import jax as _jax
+    from repro.core import run_bp
+    t0 = time.perf_counter()
+    for i, pgm in enumerate(pgms):
+        res = run_bp(pgm, scheduler, _jax.random.fold_in(rng, i), eps=eps,
+                     max_rounds=max_rounds, track_history=False)
+        _jax.block_until_ready(res.logm)
+    return time.perf_counter() - t0
+
+
+def time_serving_batched(pgms: Sequence[PGM], scheduler, rng, *,
+                         growth: float = 2.0, eps: float = 1e-3,
+                         max_rounds: int = 2000) -> float:
+    """Wall time of the bucketed batched engine over the same stream."""
+    import jax as _jax
+    from repro.core import run_bp_many
+    t0 = time.perf_counter()
+    res = run_bp_many(pgms, scheduler, rng, growth=growth, eps=eps,
+                      max_rounds=max_rounds)
+    _jax.block_until_ready(res[-1].logm)
+    return time.perf_counter() - t0

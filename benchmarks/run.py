@@ -11,8 +11,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_correctness, bench_greedy, bench_kernel,
-                        bench_protein, bench_rnbp, bench_tradeoff)
+from benchmarks import (bench_batch, bench_correctness, bench_greedy,
+                        bench_kernel, bench_protein, bench_rnbp,
+                        bench_tradeoff)
 
 SUITES = {
     "fig2_tradeoff": bench_tradeoff,
@@ -21,6 +22,7 @@ SUITES = {
     "fig5_correctness": bench_correctness,
     "protein": bench_protein,
     "kernel": bench_kernel,
+    "batch": bench_batch,
 }
 
 

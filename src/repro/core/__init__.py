@@ -4,12 +4,16 @@ Public API:
   build_pgm          padded pairwise-MRF builder
   run_bp             frontier-based BP (Algorithm 1) under jit
   LBP/RBP/RS/RnBP    message schedulings (Table IV)
+  BatchedPGM, bucket_pgms, run_bp_batch, run_bp_many
+                     batched multi-graph engine (vmap-able buckets)
   run_srbp           serial residual BP baseline
   ve_marginals, brute_force_marginals, kl_divergence   exact oracles
 """
 
-from repro.core.graph import PGM, build_pgm, NEG_INF
+from repro.core.graph import PGM, build_pgm, pad_pgm, NEG_INF
 from repro.core.runner import BPResult, run_bp
+from repro.core.batch import (BatchedPGM, Bucket, batch_keys, bucket_pgms,
+                              run_bp_batch, run_bp_many)
 from repro.core.schedulers import LBP, RBP, RS, RnBP
 from repro.core.serial import SRBPResult, run_srbp
 from repro.core.exact import (brute_force_marginals, kl_divergence,
@@ -17,7 +21,9 @@ from repro.core.exact import (brute_force_marginals, kl_divergence,
 from repro.core import messages
 
 __all__ = [
-    "PGM", "build_pgm", "NEG_INF", "BPResult", "run_bp",
+    "PGM", "build_pgm", "pad_pgm", "NEG_INF", "BPResult", "run_bp",
+    "BatchedPGM", "Bucket", "batch_keys", "bucket_pgms", "run_bp_batch",
+    "run_bp_many",
     "LBP", "RBP", "RS", "RnBP", "SRBPResult", "run_srbp",
     "brute_force_marginals", "kl_divergence", "ve_marginals", "messages",
 ]

@@ -65,9 +65,17 @@ class PGM:
     log_psi_v: jax.Array
     state_mask: jax.Array
     n_states: jax.Array
-    # Static metadata (ints, not traced).
+    # Static metadata (ints, not traced). Under batching these hold the
+    # *bucket ceiling* (max real count over the batch) so every graph in a
+    # bucket shares one treedef; the traced per-graph counts live below.
     n_real_vertices: int = dataclasses.field(metadata=dict(static=True))
     n_real_edges: int = dataclasses.field(metadata=dict(static=True))  # directed
+    # Traced real counts, () int32. Schedulers must size frontiers from these
+    # (via ``traced_edge_count``/``traced_vertex_count``) so the same trace
+    # serves every graph of a vmapped bucket. ``None`` falls back to the
+    # static ints for hand-built PGMs.
+    edge_count: jax.Array | None = None
+    vertex_count: jax.Array | None = None
 
     @property
     def n_edges(self) -> int:
@@ -82,6 +90,18 @@ class PGM:
     @property
     def n_states_max(self) -> int:
         return self.log_psi_v.shape[1]
+
+    def traced_edge_count(self) -> jax.Array:
+        """() int32 real directed-edge count, traced (batch-safe)."""
+        if self.edge_count is None:
+            return jnp.int32(self.n_real_edges)
+        return self.edge_count
+
+    def traced_vertex_count(self) -> jax.Array:
+        """() int32 real vertex count, traced (batch-safe)."""
+        if self.vertex_count is None:
+            return jnp.int32(self.n_real_vertices)
+        return self.vertex_count
 
     def degree(self) -> jax.Array:
         """In-degree per vertex (== out-degree; graph is symmetric)."""
@@ -140,7 +160,8 @@ def build_pgm_uniform(
         log_psi_e=jnp.asarray(log_psi_e, dtype=dtype),
         log_psi_v=jnp.asarray(log_psi_v, dtype=dtype),
         state_mask=jnp.asarray(state_mask), n_states=jnp.asarray(n_states),
-        n_real_vertices=n_vertices, n_real_edges=e_dir)
+        n_real_vertices=n_vertices, n_real_edges=e_dir,
+        edge_count=jnp.int32(e_dir), vertex_count=jnp.int32(n_vertices))
 
 
 def build_pgm(
@@ -216,4 +237,72 @@ def build_pgm(
         n_states=jnp.asarray(n_states),
         n_real_vertices=n_vertices,
         n_real_edges=e_dir,
+        edge_count=jnp.int32(e_dir),
+        vertex_count=jnp.int32(n_vertices),
+    )
+
+
+def pad_pgm_arrays(pgm: PGM, *, n_edges: int, n_vertices: int,
+                   n_states: int) -> dict:
+    """Host-side (numpy) re-padding of a PGM's arrays to larger shapes.
+
+    Deliberately numpy: bucketing pads many graphs of *distinct* shapes, and
+    doing it in jnp costs one tiny XLA compilation per (op, shape) pair --
+    seconds of hidden warm-up per fresh request stream. Returns a field
+    dict; ``pad_pgm``/``BatchedPGM.from_pgms`` convert to device arrays
+    once at the end.
+    """
+    e0, v0, s0 = pgm.n_edges, pgm.n_vertices, pgm.n_states_max
+    assert n_edges >= e0 and n_vertices >= v0 and n_states >= s0, \
+        f"cannot shrink ({e0},{v0},{s0}) -> ({n_edges},{n_vertices},{n_states})"
+    de, dv, ds = n_edges - e0, n_vertices - v0, n_states - s0
+    dummy = pgm.n_real_vertices
+
+    log_psi_v = np.pad(np.asarray(pgm.log_psi_v), ((0, dv), (0, ds)),
+                       constant_values=NEG_INF)
+    state_mask = np.pad(np.asarray(pgm.state_mask), ((0, dv), (0, ds)))
+    if dv:
+        # new padding vertices: one valid zero-potential state (like dummy)
+        log_psi_v[v0:, 0] = 0.0
+        state_mask[v0:, 0] = True
+    return dict(
+        edge_src=np.pad(np.asarray(pgm.edge_src), (0, de),
+                        constant_values=dummy),
+        edge_dst=np.pad(np.asarray(pgm.edge_dst), (0, de),
+                        constant_values=dummy),
+        edge_rev=np.concatenate([np.asarray(pgm.edge_rev),
+                                 np.arange(e0, n_edges, dtype=np.int32)]),
+        edge_mask=np.pad(np.asarray(pgm.edge_mask), (0, de)),
+        log_psi_e=np.pad(np.asarray(pgm.log_psi_e),
+                         ((0, de), (0, ds), (0, ds))),
+        log_psi_v=log_psi_v,
+        state_mask=state_mask,
+        n_states=np.pad(np.asarray(pgm.n_states), (0, dv),
+                        constant_values=1),
+        edge_count=np.int32(pgm.n_real_edges),
+        vertex_count=np.int32(pgm.n_real_vertices),
+    )
+
+
+def pad_pgm(pgm: PGM, *, n_edges: int, n_vertices: int, n_states: int,
+            n_real_edges: int | None = None,
+            n_real_vertices: int | None = None) -> PGM:
+    """Re-pad a PGM to larger shared shapes (the bucketing primitive).
+
+    Extra edges point at the graph's own dummy vertex with ``edge_mask``
+    False; extra vertices get a single valid zero-potential state; extra
+    state columns are masked out -- all inert by the same conventions the
+    builders use, so BP on the padded graph commits the same messages on
+    real edges. The optional ``n_real_*`` override the *static* metadata to
+    a bucket ceiling (shared treedef across a batch); the traced per-graph
+    counts are preserved.
+    """
+    arrs = pad_pgm_arrays(pgm, n_edges=n_edges, n_vertices=n_vertices,
+                          n_states=n_states)
+    return PGM(
+        n_real_vertices=(pgm.n_real_vertices if n_real_vertices is None
+                         else n_real_vertices),
+        n_real_edges=(pgm.n_real_edges if n_real_edges is None
+                      else n_real_edges),
+        **{k: jnp.asarray(v) for k, v in arrs.items()},
     )

@@ -9,6 +9,14 @@ all shapes are fixed and selection is pure.
 ``select`` receives ``unconverged`` (count of edges with residual >= eps this
 round) because RnBP's dynamic-p controller consumes it; other schedulers
 ignore it.
+
+Batch-safety contract (``repro.core.batch`` vmaps ``init``/``select`` over a
+bucket of same-shape graphs): implementations must not branch on *per-graph*
+real sizes statically. Static shapes / ``pgm.n_real_*`` ints are bucket-wide
+ceilings; anything per-graph (frontier size k, padding masks, controller
+state) must come from the traced ``pgm.traced_edge_count()`` /
+``pgm.traced_vertex_count()`` scalars so one trace serves every graph in the
+bucket.
 """
 
 from __future__ import annotations

@@ -28,10 +28,16 @@ class RBP:
 
     def select(self, pgm: PGM, residuals: jax.Array, eps: float,
                rng: jax.Array, state, unconverged: jax.Array):
-        k = max(1, int(round(self.p * pgm.n_real_edges)))
-        k = min(k, residuals.shape[0])
-        topk = jax.lax.top_k(residuals, k)[0]
-        thresh = topk[-1]
+        # Static k ceiling (bucket max under batching; == the graph's own k
+        # for a single graph), then the per-graph k indexes into the sorted
+        # top-k so one trace serves every graph of a vmapped bucket.
+        k_max = max(1, int(round(self.p * pgm.n_real_edges)))
+        k_max = min(k_max, residuals.shape[0])
+        topk = jax.lax.top_k(residuals, k_max)[0]
+        k = jnp.clip(jnp.round(self.p * pgm.traced_edge_count()
+                               .astype(jnp.float32)).astype(jnp.int32),
+                     1, k_max)
+        thresh = topk[k - 1]
         # Only update messages that would actually move (residual > 0); on the
         # last stretch the k-th residual is 0 and we must not thrash padding.
         frontier = (residuals >= jnp.maximum(thresh, 1e-30)) & pgm.edge_mask

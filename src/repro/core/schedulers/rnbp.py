@@ -34,8 +34,9 @@ class RnBP:
     inner_sweeps: int = 1
 
     def init(self, pgm: PGM):
-        # OldEdgeCount starts at "everything unconverged".
-        return jnp.asarray(pgm.n_real_edges, dtype=jnp.float32)
+        # OldEdgeCount starts at "everything unconverged". Traced count so a
+        # vmapped bucket carries each graph's own controller state.
+        return pgm.traced_edge_count().astype(jnp.float32)
 
     def select(self, pgm: PGM, residuals: jax.Array, eps: float,
                rng: jax.Array, state, unconverged: jax.Array):

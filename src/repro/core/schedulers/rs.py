@@ -35,13 +35,20 @@ class RS:
         vres = jax.ops.segment_max(
             jnp.where(pgm.edge_mask, residuals, 0.0), pgm.edge_dst,
             num_segments=pgm.n_vertices)
-        vres = vres.at[pgm.n_real_vertices:].set(0.0)  # dummy + padding
+        # dummy + padding vertices (mask, not a static slice: batch-safe)
+        real = jnp.arange(vres.shape[0]) < pgm.traced_vertex_count()
+        vres = jnp.where(real, vres, 0.0)
         # k roots. The paper parameterizes frontiers in messages (p * 2|E|);
         # a depth-h splash touches ~deg^h edges, so k roots ~ p*2|E| / deg^h
-        # messages. We select k = max(1, p * V) roots, the standard RS choice.
-        k = max(1, int(round(self.p * pgm.n_real_vertices)))
-        k = min(k, vres.shape[0])
-        thresh = jax.lax.top_k(vres, k)[0][-1]
+        # messages. We select k = max(1, p * V) roots, the standard RS
+        # choice; under batching k_max is the bucket ceiling and the traced
+        # per-graph k indexes into the sorted top-k.
+        k_max = max(1, int(round(self.p * pgm.n_real_vertices)))
+        k_max = min(k_max, vres.shape[0])
+        k = jnp.clip(jnp.round(self.p * pgm.traced_vertex_count()
+                               .astype(jnp.float32)).astype(jnp.int32),
+                     1, k_max)
+        thresh = jax.lax.top_k(vres, k_max)[0][k - 1]
         in_ball = (vres >= jnp.maximum(thresh, 1e-30))
         # Expand the ball h hops: a vertex joins if any neighbour is in.
         for _ in range(self.h):

@@ -22,6 +22,12 @@ S^2 * BLK_E * 4 B; ``pick_block_edges`` sizes BLK_E so the working set stays
 under ~4 MiB (one core's VMEM is 16 MiB on v5e; we leave room for
 double-buffering of in/out streams).
 
+The kernel is batch-agnostic by construction: edges are an opaque 1-D grid
+axis, so a *bucket* of B same-shape graphs is served by folding the batch
+axis into the edge axis (E -> B*E, see ``repro.kernels.ops.
+pallas_update_batch``) -- one launch, full lane occupancy across graph
+boundaries, no per-graph block-remainder waste.
+
 Validated in ``interpret=True`` mode on CPU against ``ref.py`` (pure jnp).
 """
 

@@ -8,6 +8,13 @@ interpret-mode fallback off-TPU.
 ``pallas_update_t`` is the layout-native variant used by the perf-tuned BP
 loop, which keeps messages transposed (S, E) across rounds so the two
 transposes per round disappear (see EXPERIMENTS.md SSPerf, BP iterations).
+
+``pallas_update_batch`` is the bucket path: a ``BatchedPGM``'s (B, E) edges
+are folded into one (B*E,) edge axis so a single kernel launch -- one
+``pallas_call`` grid of B*E / BLK_E blocks -- covers the whole bucket,
+instead of B separate launches (or a vmap-added grid dimension with
+per-graph remainder waste). ``make_pallas_update_batch`` packages it as a
+``batch_update_fn`` for ``repro.core.batch.run_bp_batch``.
 """
 
 from __future__ import annotations
@@ -54,3 +61,36 @@ def make_pallas_update(interpret: bool | None = None):
         return pallas_update(pgm, logm, interpret=interpret)
 
     return update_fn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pallas_update_batch(bpgm: PGM, logm: jax.Array, *,
+                        interpret: bool | None = None):
+    """(cand (B,E,S), resid (B,E)) over a stacked element-PGM whose leaves
+    carry a leading batch axis (``BatchedPGM.pgm``). The batch axis is folded
+    into the kernel's edge axis: one launch, grid = ceil(B*E / BLK_E).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, e, s = logm.shape
+    pre = jax.vmap(M.edge_prelude)(bpgm, logm)                # (B, E, S)
+    # Fold batch into edges: graph b's edge e becomes folded edge b*E + e.
+    logpsi_t = jnp.transpose(bpgm.log_psi_e.reshape(b * e, s, s), (1, 2, 0))
+    dmask = jax.vmap(lambda p: p.state_mask[p.edge_dst])(bpgm)
+    dmask_t = dmask.reshape(b * e, s).T                       # (S, B*E)
+    new_t, resid = fused_update_t(
+        logpsi_t, pre.reshape(b * e, s).T, logm.reshape(b * e, s).T,
+        dmask_t, interpret=interpret)
+    return new_t.T.reshape(b, e, s), resid.reshape(b, e)
+
+
+def make_pallas_update_batch(interpret: bool | None = None):
+    """``batch_update_fn`` closure for ``run_bp_batch``: whole-bucket fused
+    message update in one kernel launch."""
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    def batch_update_fn(bpgm: PGM, logm: jax.Array):
+        return pallas_update_batch(bpgm, logm, interpret=interpret)
+
+    return batch_update_fn

@@ -1,5 +1,5 @@
 from repro.pgm.datasets import (chain_graph, ising_grid, ising_grid_fast,
-                                protein_like_graph, small_ising)
+                                loop_graph, protein_like_graph, small_ising)
 
-__all__ = ["ising_grid", "ising_grid_fast", "chain_graph",
+__all__ = ["ising_grid", "ising_grid_fast", "chain_graph", "loop_graph",
            "protein_like_graph", "small_ising"]

@@ -106,6 +106,17 @@ def chain_graph(n: int, C: float = 10.0, seed: int = 0) -> PGM:
     return build_pgm(n, edges, unary, pairwise)
 
 
+def loop_graph(n: int, C: float = 2.0, seed: int = 0) -> PGM:
+    """Length-n binary cycle (single loop). The minimal loopy graph: BP is
+    no longer exact but converges fast -- a cheap mixed-batch member that
+    stresses the batched engine with a third structure class."""
+    rng = np.random.default_rng(seed)
+    edges = np.stack([np.arange(n), (np.arange(n) + 1) % n], axis=1)
+    unary = [rng.uniform(1e-3, 1.0, size=2) for _ in range(n)]
+    pairwise = _ising_potentials(rng, len(edges), C)
+    return build_pgm(n, edges, unary, pairwise)
+
+
 def protein_like_graph(n_vertices: int = 120, seed: int = 0, *,
                        max_states: int = 81, coupling: float = 2.0,
                        radius: float = 0.14) -> PGM:

@@ -35,6 +35,8 @@ class TestMoEDispatchParity:
 
     def test_sharded_equals_ragged_subprocess(self):
         """sharded dispatch on 4 fake devices == ragged on one."""
+        if not hasattr(jax, "shard_map"):
+            pytest.skip("jax.shard_map requires a newer jax")
         code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -67,6 +69,11 @@ print("OK")
 
 
 class TestBandedBP:
+    @pytest.fixture(autouse=True)
+    def _require_dist(self):
+        pytest.importorskip(
+            "repro.dist", reason="repro.dist (banded BP) not in tree yet")
+
     def test_banded_matches_reference_subprocess(self):
         code = r"""
 import os

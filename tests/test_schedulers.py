@@ -1,11 +1,28 @@
 """Scheduler frontier-selection semantics (paper SSIII-IV) + hypothesis
-property tests on the RnBP dynamic-p controller."""
+property tests on the RnBP dynamic-p controller.
 
-import hypothesis.strategies as st
+``hypothesis`` is an optional test extra: without it the controller
+property tests skip (via ``pytest.importorskip``) and the frontier
+semantics tests still run.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                       # degrade: property tests skip
+    def given(*_a, **_k):
+        return lambda f: f
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in namespace, never executed
+        integers = floats = staticmethod(lambda *a, **k: None)
 
 from repro.core import LBP, RBP, RS, RnBP
 from repro.core import messages as M
@@ -68,6 +85,12 @@ class TestFrontiers:
 
 
 class TestRnBPController:
+    # class-scoped: a function-scoped autouse fixture would trip
+    # Hypothesis's function_scoped_fixture health check when it IS installed
+    @pytest.fixture(autouse=True, scope="class")
+    def _require_hypothesis(self):
+        pytest.importorskip("hypothesis")
+
     @settings(max_examples=30, deadline=None)
     @given(old=st.integers(1, 10**6), new=st.integers(0, 10**6))
     def test_dynamic_p_rule(self, old, new):

@@ -1,7 +1,7 @@
-"""Batched multi-graph engine: graphs/sec, single vs batched.
+"""Batched multi-graph engine: graphs/sec, single vs batched, evacuation.
 
-Two regimes, both reported (and persisted to ``BENCH_batch.json`` so the
-perf trajectory accumulates in CI artifacts):
+Three regimes, all reported (and persisted to ``benchmarks/out/
+BENCH_batch.json`` so the perf trajectory accumulates in CI artifacts):
 
 - **serving (cold)**: a mixed-size request stream where (nearly) every graph
   has a distinct padded shape -- the realistic serving case on XLA, where
@@ -14,6 +14,11 @@ perf trajectory accumulates in CI artifacts):
   stragglers set the round count: expect <= 1x here. On a many-core device
   the same fold is what saturates the hardware -- the paper's premise; the
   number is reported to keep the CPU trajectory honest.
+- **straggler evacuation**: a same-shape stream with one graph that stalls
+  to ``max_rounds`` (LBP on a hard Ising instance). ``BPEngine.serve``
+  evacuates converged graphs between chunks and backfills from the pending
+  queue; total and wasted device sweeps must drop vs. the run-every-
+  bucket-to-completion baseline (the PR-1 behavior).
 """
 
 from __future__ import annotations
@@ -25,11 +30,35 @@ import time
 
 import jax
 
-from repro.core import RnBP
-from benchmarks.common import (emit, mixed_graph_set, time_serving_batched,
-                               time_serving_loop)
+from repro.core import BPConfig, BPEngine, RnBP
+from repro.pgm import ising_grid
+from benchmarks.common import (emit, mixed_graph_set, out_path,
+                               time_serving_batched, time_serving_loop)
 
-JSON_PATH = "BENCH_batch.json"
+
+def _straggler_section(record: dict) -> None:
+    # LBP is deterministic; ising(10, 3.5, seed=1) stalls to max_rounds
+    # while the C=1.5 instances converge in tens of rounds.
+    fast = [ising_grid(10, 1.5, seed=s) for s in range(19)]
+    stream = fast[:5] + [ising_grid(10, 3.5, seed=1)] + fast[5:]
+    engine = BPEngine(BPConfig(scheduler="lbp", eps=1e-5, max_rounds=384,
+                               history=False))
+    kw = dict(max_batch=4, chunk_rounds=48)
+    evac = engine.serve(stream, jax.random.key(0), evacuate=True, **kw).stats
+    base = engine.serve(stream, jax.random.key(0), evacuate=False, **kw).stats
+    emit("batch/straggler/evacuate", evac.device_sweeps,
+         f"wasted={evac.wasted_sweeps};backfilled={evac.backfilled}")
+    emit("batch/straggler/baseline", base.device_sweeps,
+         f"wasted={base.wasted_sweeps};"
+         f"sweep_ratio={evac.device_sweeps / base.device_sweeps:.3f}")
+    record["straggler_evacuation"] = {
+        "evac_device_sweeps": evac.device_sweeps,
+        "evac_wasted_sweeps": evac.wasted_sweeps,
+        "evac_backfilled": evac.backfilled,
+        "baseline_device_sweeps": base.device_sweeps,
+        "baseline_wasted_sweeps": base.wasted_sweeps,
+        "sweep_ratio": evac.device_sweeps / base.device_sweeps,
+    }
 
 
 def run(full: bool = False, n_graphs: int = 0) -> None:
@@ -73,6 +102,8 @@ def run(full: bool = False, n_graphs: int = 0) -> None:
             "speedup": t_naive / t_batch,
         }
 
-    with open(JSON_PATH, "w") as f:
+    _straggler_section(record)
+
+    with open(out_path("BENCH_batch.json"), "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")

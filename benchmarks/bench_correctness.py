@@ -10,21 +10,23 @@ import numpy as np
 
 import jax
 
-from repro.core import RnBP, kl_divergence, run_bp, run_srbp, ve_marginals
+from repro.core import BPConfig, BPEngine, kl_divergence, ve_marginals
 from repro.pgm import small_ising
 
 from benchmarks.common import emit
 
 
 def run(full: bool = False, n_graphs: int = 5) -> None:
+    rnbp = BPEngine(BPConfig(scheduler="rnbp", scheduler_kwargs={"low_p": 0.7},
+                             eps=1e-5, max_rounds=4000))
+    srbp = BPEngine(BPConfig(scheduler="srbp", eps=1e-5))
     for seed in range(n_graphs):
         pgm, nv, edges, unary, pairwise = small_ising(10, 2.0, seed=seed)
         exact = ve_marginals(nv, edges, unary, pairwise)
-        res = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(seed), eps=1e-5,
-                     max_rounds=4000)
+        res = rnbp.run(pgm, jax.random.key(seed))
         b = np.exp(np.asarray(res.beliefs))[:nv, :2]
         kl_rnbp = [kl_divergence(exact[v], b[v]) for v in range(nv)]
-        sr = run_srbp(pgm, eps=1e-5)
+        sr = srbp.run(pgm)
         bs = np.exp(sr.beliefs)[:nv, :2]
         kl_srbp = [kl_divergence(exact[v], bs[v]) for v in range(nv)]
         emit(f"fig5/ising10x10_C2_seed{seed}/RnBP", 0.0,

@@ -7,7 +7,7 @@ off-``--full``).
 
 from __future__ import annotations
 
-from repro.core import RBP, RS, run_srbp
+from repro.core import BPConfig, BPEngine, RBP, RS
 from repro.pgm import chain_graph, ising_grid
 
 from benchmarks.common import emit, graph_set, summarize, time_bp
@@ -23,9 +23,11 @@ def run(full: bool = False, n_graphs: int = 3) -> None:
         (f"chain{chain_n}_C10", lambda s: chain_graph(chain_n, seed=s),
          1.0 / 16, 1.0 / 16),
     ]
+    srbp_eng = BPEngine(BPConfig(
+        scheduler="srbp", scheduler_kwargs={"time_limit_s": srbp_cap}))
     for dname, factory, p_rbp, p_rs in datasets:
         graphs = graph_set(factory, n_graphs)
-        srbp = [run_srbp(g, time_limit_s=srbp_cap) for g in graphs]
+        srbp = [srbp_eng.run(g) for g in graphs]
         srbp_conv = [r for r in srbp if r.converged]
         srbp_t = (sum(r.wall_time_s for r in srbp_conv) / len(srbp_conv)
                   if srbp_conv else srbp_cap)

@@ -10,7 +10,7 @@ Reproduction targets:
 
 from __future__ import annotations
 
-from repro.core import LBP, RnBP, run_srbp
+from repro.core import BPConfig, BPEngine, LBP, RnBP
 from repro.pgm import chain_graph, ising_grid
 
 from benchmarks.common import emit, graph_set, summarize, time_bp
@@ -28,9 +28,11 @@ def run(full: bool = False, n_graphs: int = 5) -> None:
         (f"ising{n2}x{n2}_C2.5", lambda s: ising_grid(n2, 2.5, seed=s), 8000),
         (f"chain{chain_n}_C10", lambda s: chain_graph(chain_n, seed=s), 4000),
     ]
+    srbp_eng = BPEngine(BPConfig(
+        scheduler="srbp", scheduler_kwargs={"time_limit_s": srbp_cap}))
     for dname, factory, max_rounds in datasets:
         graphs = graph_set(factory, n_graphs)
-        srbp = [run_srbp(g, time_limit_s=srbp_cap) for g in graphs]
+        srbp = [srbp_eng.run(g) for g in graphs]
         srbp_conv = [r for r in srbp if r.converged]
         srbp_t = (sum(r.wall_time_s for r in srbp_conv) / len(srbp_conv)
                   if srbp_conv else srbp_cap)

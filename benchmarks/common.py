@@ -15,14 +15,23 @@ reproduction targets; wall-clock ratios are secondary on CPU.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
 from typing import Callable, Iterable, List, Sequence
 
 import jax
 import numpy as np
 
-from repro.core import run_bp
+from repro.core import BPConfig, BPEngine
 from repro.core.graph import PGM
+
+
+def out_path(filename: str) -> pathlib.Path:
+    """Benchmark artifacts go to ``benchmarks/out/`` (gitignored), not the
+    repo root; CI uploads from here."""
+    d = pathlib.Path(__file__).resolve().parent / "out"
+    d.mkdir(exist_ok=True)
+    return d / filename
 
 
 @dataclasses.dataclass
@@ -30,23 +39,32 @@ class RunStat:
     converged: bool
     rounds: int
     wall_s: float
-    updates: float
+    updates: int
+
+
+def engine_for(scheduler, *, eps: float = 1e-3, max_rounds: int = 4000,
+               update_fn=None, **cfg) -> BPEngine:
+    """One engine per (scheduler, backend): keeps jit caches warm across
+    timed calls."""
+    return BPEngine(BPConfig(scheduler=scheduler, eps=eps,
+                             max_rounds=max_rounds,
+                             backend=update_fn if update_fn else "ref",
+                             **cfg))
 
 
 def time_bp(pgm: PGM, scheduler, *, eps: float = 1e-3, max_rounds: int = 4000,
             seed: int = 0, update_fn=None) -> RunStat:
-    kwargs = {} if update_fn is None else dict(update_fn=update_fn)
+    engine = engine_for(scheduler, eps=eps, max_rounds=max_rounds,
+                        update_fn=update_fn)
     # compile first (compile time is not a paper metric)
-    res = run_bp(pgm, scheduler, jax.random.key(seed), eps=eps,
-                 max_rounds=max_rounds, **kwargs)
+    res = engine.run(pgm, jax.random.key(seed))
     jax.block_until_ready(res.logm)
     t0 = time.perf_counter()
-    res = run_bp(pgm, scheduler, jax.random.key(seed), eps=eps,
-                 max_rounds=max_rounds, **kwargs)
+    res = engine.run(pgm, jax.random.key(seed))
     jax.block_until_ready(res.logm)
     wall = time.perf_counter() - t0
     return RunStat(bool(res.converged), int(res.rounds), wall,
-                   float(res.updates))
+                   int(res.updates))
 
 
 def summarize(stats: Sequence[RunStat]) -> dict:
@@ -81,16 +99,16 @@ def mixed_graph_set(n: int, *, grid_lo: int = 6, chain_lo: int = 50,
 
 def time_serving_loop(pgms: Sequence[PGM], scheduler, rng, *,
                       eps: float = 1e-3, max_rounds: int = 2000) -> float:
-    """Wall time of the naive per-request loop (one ``run_bp`` per graph,
-    blocking each -- exactly what examples/bp_serving.py did pre-batching).
-    Includes any compile time the loop triggers, as serving would."""
-    import jax as _jax
-    from repro.core import run_bp
+    """Wall time of the naive per-request loop (one ``engine.run`` per
+    graph, blocking each -- exactly what examples/bp_serving.py did
+    pre-batching). Includes any compile time the loop triggers, as serving
+    would."""
+    engine = engine_for(scheduler, eps=eps, max_rounds=max_rounds,
+                        history=False)
     t0 = time.perf_counter()
     for i, pgm in enumerate(pgms):
-        res = run_bp(pgm, scheduler, _jax.random.fold_in(rng, i), eps=eps,
-                     max_rounds=max_rounds, track_history=False)
-        _jax.block_until_ready(res.logm)
+        res = engine.run(pgm, jax.random.fold_in(rng, i))
+        jax.block_until_ready(res.logm)
     return time.perf_counter() - t0
 
 
@@ -98,10 +116,9 @@ def time_serving_batched(pgms: Sequence[PGM], scheduler, rng, *,
                          growth: float = 2.0, eps: float = 1e-3,
                          max_rounds: int = 2000) -> float:
     """Wall time of the bucketed batched engine over the same stream."""
-    import jax as _jax
-    from repro.core import run_bp_many
+    engine = engine_for(scheduler, eps=eps, max_rounds=max_rounds,
+                        history=False)
     t0 = time.perf_counter()
-    res = run_bp_many(pgms, scheduler, rng, growth=growth, eps=eps,
-                      max_rounds=max_rounds)
-    _jax.block_until_ready(res[-1].logm)
+    res = engine.run_many(pgms, rng, growth=growth)
+    jax.block_until_ready(res[-1].logm)
     return time.perf_counter() - t0

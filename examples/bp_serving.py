@@ -2,13 +2,20 @@
 
 The paper's algorithm is an *inference* engine, so the end-to-end driver is
 a serving loop: a stream of PGM inference requests (mixed Ising / chain /
-protein-like graphs) is micro-batched by the bucketed engine
-(``repro.core.batch``) -- requests are grouped into shape-homogeneous
-buckets and each bucket runs as ONE ``run_bp_batch`` call (one compilation,
-one device program per bucket shape instead of one per request shape).
-The ``--growth`` knob picks the bucketing policy: 2.0 bounds padding waste
-for steady traffic over few shape families, ``inf`` collapses a shape-
-diverse cold stream into a single compilation.
+protein-like graphs) runs through ``BPEngine.serve`` -- requests are grouped
+into shape-homogeneous buckets, each bucket runs as one compiled program,
+and between chunks the engine *evacuates* converged graphs (their results
+are released immediately) and backfills the freed slots from the pending
+queue, so one straggler no longer holds a whole bucket's worth of finished
+work hostage.
+
+Knobs:
+  --growth        bucketing policy: 2.0 bounds padding waste for steady
+                  traffic over few shape families, ``inf`` collapses a
+                  shape-diverse cold stream into a single compilation
+  --max-batch     resident bucket width (slots that evacuation recycles)
+  --chunk-rounds  rounds per device chunk between evacuation sweeps
+  --no-evacuate   PR-1 baseline: run every bucket to completion
 
 Run:  PYTHONPATH=src python examples/bp_serving.py [--requests 12]
 """
@@ -19,8 +26,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import RnBP, bucket_pgms, run_bp_batch
-from repro.ft import StragglerMonitor
+from repro.core import BPConfig, BPEngine
 from repro.pgm import chain_graph, ising_grid, protein_like_graph
 
 
@@ -40,57 +46,50 @@ def main():
     ap.add_argument("--eps", type=float, default=1e-3)
     ap.add_argument("--growth", type=float, default=2.0,
                     help="bucket edge-ceiling growth factor; inf = 1 bucket")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="resident bucket width (evacuated slots backfill)")
+    ap.add_argument("--chunk-rounds", type=int, default=512,
+                    help="rounds per chunk between evacuation sweeps")
+    ap.add_argument("--no-evacuate", action="store_true",
+                    help="baseline: run each bucket to completion")
     args = ap.parse_args()
 
-    sched = RnBP(low_p=0.4, high_p=0.9)   # paper's protein settings
-    monitor = StragglerMonitor()
-    rng = jax.random.key(0)
+    engine = BPEngine(BPConfig(
+        scheduler="rnbp",
+        scheduler_kwargs={"low_p": 0.4, "high_p": 0.9},  # paper's protein run
+        eps=args.eps, max_rounds=6000, history=False))
 
     t_all = time.perf_counter()
     stream = list(request_stream(args.requests))
-    req_ids = [r[0] for r in stream]
     kinds = {r[0]: r[1] for r in stream}
     pgms = [r[2] for r in stream]
     t_build = time.perf_counter() - t_all
+    print(f"{args.requests} requests (growth={args.growth}, "
+          f"width={args.max_batch}); build {t_build:.2f}s", flush=True)
 
-    buckets = bucket_pgms(pgms, growth=args.growth)
-    print(f"{args.requests} requests -> {len(buckets)} buckets "
-          f"(growth={args.growth}); build {t_build:.2f}s", flush=True)
+    rep = engine.serve(pgms, jax.random.key(0), growth=args.growth,
+                       max_batch=args.max_batch,
+                       chunk_rounds=args.chunk_rounds,
+                       evacuate=not args.no_evacuate)
 
     done = failed = 0
-    rows = {}
-    for b, bucket in enumerate(buckets):
-        t0 = time.perf_counter()
-        # key by *input* position (as run_bp_many does) so results are
-        # independent of the bucketing policy
-        keys = jax.numpy.stack([jax.random.fold_in(rng, gi)
-                                for gi in bucket.indices])
-        res = run_bp_batch(bucket.batch, sched, keys, eps=args.eps,
-                           max_rounds=6000)
-        jax.block_until_ready(res.logm)
-        dt = time.perf_counter() - t0
-        straggler = monitor.record(dt)
-        print(f"bucket {b}: {len(bucket.indices)} graphs "
-              f"E={bucket.batch.n_edges} S={bucket.batch.n_states_max} "
-              f"wall={dt:5.2f}s"
-              + ("  [straggler]" if straggler else ""), flush=True)
-        beliefs = np.asarray(res.beliefs)
-        for j, gi in enumerate(bucket.indices):
-            ok = bool(res.converged[j])
-            done += ok
-            failed += not ok
-            marg = np.exp(beliefs[j, 0])
-            rows[req_ids[gi]] = (
-                f"req {req_ids[gi]:3d} {kinds[req_ids[gi]]:14s} "
-                f"{'ok  ' if ok else 'FAIL'} rounds={int(res.rounds[j]):5d} "
-                f"P(x0)={np.round(marg[:2], 3)}")
-    for rid in req_ids:
-        print(rows[rid], flush=True)
+    for rid, res in enumerate(rep.results):
+        ok = bool(res.converged)
+        done += ok
+        failed += not ok
+        marg = np.exp(np.asarray(res.beliefs[0]))
+        print(f"req {rid:3d} {kinds[rid]:14s} "
+              f"{'ok  ' if ok else 'FAIL'} rounds={int(res.rounds):5d} "
+              f"P(x0)={np.round(marg[:2], 3)}", flush=True)
+
+    s = rep.stats
     wall = time.perf_counter() - t_all
     print(f"\nserved {done}/{args.requests} converged "
           f"({failed} unconverged) in {wall:.1f}s "
-          f"({args.requests / wall:.1f} graphs/s); "
-          f"straggler events: {monitor.events}")
+          f"({args.requests / wall:.1f} graphs/s)")
+    print(f"chunks={s.chunks} evacuated={s.evacuated} "
+          f"backfilled={s.backfilled} sweeps: device={s.device_sweeps} "
+          f"useful={s.useful_sweeps} wasted={s.wasted_sweeps}")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import LBP, RnBP, run_bp
+from repro.core import BPConfig, BPEngine, LBP, RnBP
 from repro.dist import make_bp_mesh, run_bp_sharded
 from repro.pgm import ising_grid
 
@@ -32,8 +32,10 @@ def main():
     print(f"Ising 48x48: {pgm.n_real_edges} directed edges over "
           f"{mesh.devices.size} shards")
 
-    ref = run_bp(pgm, RnBP(low_p=0.7), jax.random.key(0), eps=1e-3,
-                 max_rounds=6000)
+    engine = BPEngine(BPConfig(scheduler="rnbp",
+                               scheduler_kwargs={"low_p": 0.7},
+                               eps=1e-3, max_rounds=6000))
+    ref = engine.run(pgm, jax.random.key(0))
     print(f"single-device RnBP: rounds={int(ref.rounds)} "
           f"converged={bool(ref.converged)}")
 

@@ -1,29 +1,49 @@
 """Core Belief Propagation library -- the paper's contribution.
 
-Public API:
+Public API (the unified engine):
+  BPConfig           frozen, serializable inference config (scheduler spec,
+                     eps, max_rounds, damping, backend, chunk_rounds)
+  BPEngine           init/step (chunked resume), run/run_many (one-shot),
+                     serve (evacuating bucketed serving driver)
+  BPState            resumable trajectory state (a checkpointable pytree)
+  ServeResult/ServeStats   serving output + sweep accounting
+  get_scheduler      registry: "lbp"/"rbp"/"rs"/"rnbp" -> Scheduler
+
+Building blocks:
   build_pgm          padded pairwise-MRF builder
-  run_bp             frontier-based BP (Algorithm 1) under jit
   LBP/RBP/RS/RnBP    message schedulings (Table IV)
-  BatchedPGM, bucket_pgms, run_bp_batch, run_bp_many
-                     batched multi-graph engine (vmap-able buckets)
-  run_srbp           serial residual BP baseline
+  BatchedPGM, bucket_pgms   vmap-able padded buckets
   ve_marginals, brute_force_marginals, kl_divergence   exact oracles
+
+Deprecated compatibility wrappers (delegate to BPEngine, exact parity):
+  run_bp, run_bp_batch, run_bp_many, run_srbp
 """
 
 from repro.core.graph import PGM, build_pgm, pad_pgm, NEG_INF
-from repro.core.runner import BPResult, run_bp
-from repro.core.batch import (BatchedPGM, Bucket, batch_keys, bucket_pgms,
-                              run_bp_batch, run_bp_many)
-from repro.core.schedulers import LBP, RBP, RS, RnBP
-from repro.core.serial import SRBPResult, run_srbp
+from repro.core.engine import (BPConfig, BPEngine, BPResult, BPState,
+                               ServeResult, ServeStats)
+from repro.core.runner import run_bp
+from repro.core.batch import (BatchedPGM, Bucket, batch_keys, bucket_key,
+                              bucket_pgms, group_ceilings, run_bp_batch,
+                              run_bp_many)
+from repro.core.schedulers import (LBP, RBP, RS, RnBP, SCHEDULERS,
+                                   get_scheduler, register_scheduler,
+                                   scheduler_spec)
+from repro.core.serial import SRBPResult, run_srbp, srbp_run
 from repro.core.exact import (brute_force_marginals, kl_divergence,
                               ve_marginals)
 from repro.core import messages
 
 __all__ = [
-    "PGM", "build_pgm", "pad_pgm", "NEG_INF", "BPResult", "run_bp",
-    "BatchedPGM", "Bucket", "batch_keys", "bucket_pgms", "run_bp_batch",
-    "run_bp_many",
-    "LBP", "RBP", "RS", "RnBP", "SRBPResult", "run_srbp",
+    "PGM", "build_pgm", "pad_pgm", "NEG_INF",
+    "BPConfig", "BPEngine", "BPResult", "BPState",
+    "ServeResult", "ServeStats",
+    "BatchedPGM", "Bucket", "batch_keys", "bucket_key", "bucket_pgms",
+    "group_ceilings",
+    "LBP", "RBP", "RS", "RnBP", "SCHEDULERS", "get_scheduler",
+    "register_scheduler", "scheduler_spec",
+    "SRBPResult", "srbp_run",
     "brute_force_marginals", "kl_divergence", "ve_marginals", "messages",
+    # deprecated wrappers
+    "run_bp", "run_bp_batch", "run_bp_many", "run_srbp",
 ]

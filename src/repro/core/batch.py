@@ -11,37 +11,26 @@ module provides the batching primitive every scaling layer builds on:
 - ``bucket_pgms``: groups heterogeneous graphs into buckets keyed by
   power-of-two (edge, state) ceilings, bounding padding waste at ~2x per
   axis, then pads each graph to its bucket shape with ``pad_pgm``.
-- ``run_bp_batch``: one ``lax.while_loop`` over the whole batch. The body is
-  the exact per-slice body of ``repro.core.runner.run_bp`` (scheduler
-  ``init``/``select`` and the frontier commit are ``jax.vmap``-ed), so a
-  batched graph reproduces its solo ``run_bp`` trajectory bit-for-trace:
-  converged graphs keep executing an idempotent body (frontier zeroed,
-  rounds frozen) until the whole bucket finishes. The message update runs
-  on the *disjoint union* of the bucket -- ``BatchedPGM.folded()`` offsets
-  vertex/edge ids so B graphs become one (B*E)-edge graph -- which both
-  beats a ``vmap``-ed update (one flat segment-sum instead of a batched
-  scatter) and reuses the unmodified single-graph ``update_fn``, Pallas
-  kernel included: the batch axis simply disappears into the kernel's edge
-  grid. ``batch_update_fn`` remains as an escape hatch for natively batched
-  updates (``repro.kernels.ops.make_pallas_update_batch``).
-- ``run_bp_many``: the serving entry point -- bucket a heterogeneous graph
-  list, run each bucket batched, scatter per-graph results back to input
-  order.
+The batched *loop* lives in ``repro.core.engine`` (one gated
+``lax.while_loop`` whose per-slice body reproduces the solo trajectory
+exactly; the message update runs on the bucket's *disjoint union* --
+``BatchedPGM.folded()`` offsets vertex/edge ids so B graphs become one
+(B*E)-edge graph riding the unmodified single-graph update, Pallas kernel
+included). ``run_bp_batch`` / ``run_bp_many`` remain here as deprecated
+wrappers around ``BPEngine``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import messages as M
 from repro.core.graph import EDGE_PAD, PGM, pad_pgm_arrays
-from repro.core.runner import BPResult
 from repro.core.schedulers.base import Scheduler
 
 
@@ -112,8 +101,19 @@ class BatchedPGM:
             edge_count=jnp.int32(b * e), vertex_count=jnp.int32(b * v))
 
     @classmethod
-    def from_pgms(cls, pgms: Sequence[PGM]) -> "BatchedPGM":
-        """Pad ``pgms`` to their joint max (E, V, S) shape and stack.
+    def from_pgms(cls, pgms: Sequence[PGM], *,
+                  n_edges: int | None = None,
+                  n_vertices: int | None = None,
+                  n_states: int | None = None,
+                  n_real_edges: int | None = None,
+                  n_real_vertices: int | None = None) -> "BatchedPGM":
+        """Pad ``pgms`` to their joint max (E, V, S) shape -- or the given
+        explicit ceilings -- and stack.
+
+        Explicit ceilings let a rolling batch (engine evacuation/backfill)
+        reserve the *group-wide* shape and static-metadata ceilings up
+        front, so any graph of the group can later be loaded into any slot
+        without changing the treedef or retracing.
 
         Padding + stacking run in numpy (one device transfer per field at
         the end): a fresh mixed-shape stream would otherwise trigger one
@@ -121,16 +121,18 @@ class BatchedPGM:
         warm-up before the engine ever runs.
         """
         assert len(pgms) > 0, "empty batch"
-        e_b = max(p.n_edges for p in pgms)
-        v_b = max(p.n_vertices for p in pgms)
-        s_b = max(p.n_states_max for p in pgms)
+        e_b = n_edges or max(p.n_edges for p in pgms)
+        v_b = n_vertices or max(p.n_vertices for p in pgms)
+        s_b = n_states or max(p.n_states_max for p in pgms)
         padded = [pad_pgm_arrays(p, n_edges=e_b, n_vertices=v_b,
                                  n_states=s_b) for p in pgms]
         stacked = {k: jnp.asarray(np.stack([d[k] for d in padded]))
                    for k in padded[0]}
         return cls(pgm=PGM(
-            n_real_vertices=max(p.n_real_vertices for p in pgms),
-            n_real_edges=max(p.n_real_edges for p in pgms), **stacked))
+            n_real_vertices=(n_real_vertices
+                             or max(p.n_real_vertices for p in pgms)),
+            n_real_edges=(n_real_edges
+                          or max(p.n_real_edges for p in pgms)), **stacked))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +140,34 @@ class Bucket:
     """One shape-homogeneous batch plus the input positions it came from."""
     indices: Tuple[int, ...]
     batch: BatchedPGM
+
+
+def bucket_key(pgm: PGM, growth: float = 2.0) -> tuple:
+    """Bucket shape key: (growth-factor ceiling of the padded edge count,
+    pow2-ceil state count). Graphs sharing a key share a padded bucket shape
+    -- and, for the evacuating server, a backfill pool."""
+    import math
+    if not growth > 1.0:
+        raise ValueError(f"growth must be > 1 (got {growth}); use 2.0 for "
+                         "pow2 buckets or math.inf for a single bucket")
+    e = _round_up(max(pgm.n_real_edges, 1), EDGE_PAD)
+    if math.isinf(growth):
+        ekey = 0
+    elif growth == 2.0:
+        ekey = _pow2_ceil(e)
+    else:
+        ekey = math.ceil(math.log(e, growth) - 1e-9)
+    return (ekey, _pow2_ceil(pgm.n_states_max))
+
+
+def group_ceilings(pgms: Sequence[PGM]) -> tuple[int, int, int, int, int]:
+    """Joint padded-shape and static-metadata ceilings over a graph group:
+    ``(n_edges, n_vertices, n_states, n_real_edges, n_real_vertices)``."""
+    return (max(p.n_edges for p in pgms),
+            max(p.n_vertices for p in pgms),
+            max(p.n_states_max for p in pgms),
+            max(p.n_real_edges for p in pgms),
+            max(p.n_real_vertices for p in pgms))
 
 
 def bucket_pgms(pgms: Sequence[PGM], *,
@@ -158,21 +188,9 @@ def bucket_pgms(pgms: Sequence[PGM], *,
     serving cold traffic whose request shapes are effectively unbounded.
     ``max_batch`` caps graphs per bucket (VMEM/HBM guard).
     """
-    import math
-    if not growth > 1.0:
-        raise ValueError(f"growth must be > 1 (got {growth}); use 2.0 for "
-                         "pow2 buckets or math.inf for a single bucket")
     keyed: dict[tuple, List[int]] = {}
     for i, p in enumerate(pgms):
-        e = _round_up(max(p.n_real_edges, 1), EDGE_PAD)
-        if math.isinf(growth):
-            ekey = 0
-        elif growth == 2.0:
-            ekey = _pow2_ceil(e)
-        else:
-            ekey = math.ceil(math.log(e, growth) - 1e-9)
-        key = (ekey, _pow2_ceil(p.n_states_max))
-        keyed.setdefault(key, []).append(i)
+        keyed.setdefault(bucket_key(p, growth), []).append(i)
     buckets = []
     for key in sorted(keyed):
         idx = keyed[key]
@@ -194,9 +212,13 @@ def batch_keys(rng: jax.Array, batch: BatchedPGM | int) -> jax.Array:
     return jax.random.split(rng, b)
 
 
-@partial(jax.jit, static_argnames=("scheduler", "max_rounds", "damping",
-                                   "update_fn", "batch_update_fn",
-                                   "track_history"))
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated: use repro.core.BPEngine with a BPConfig "
+        "(config-driven scheduler/backend, chunked resume, evacuation)",
+        DeprecationWarning, stacklevel=3)
+
+
 def run_bp_batch(batch: BatchedPGM,
                  scheduler: Scheduler,
                  rng: jax.Array,
@@ -204,79 +226,23 @@ def run_bp_batch(batch: BatchedPGM,
                  eps: float = 1e-3,
                  max_rounds: int = 2000,
                  damping: float = 0.0,
-                 update_fn: Callable = M.ref_update,
+                 update_fn: Callable | None = None,
                  batch_update_fn: Callable | None = None,
-                 track_history: bool = False) -> BPResult:
-    """Frontier-based BP over a whole bucket in one ``lax.while_loop``.
+                 track_history: bool = False):
+    """Deprecated wrapper: ``BPEngine(BPConfig(...)).run(batch, rng)``.
 
-    Returns a ``BPResult`` whose every field carries a leading batch axis
-    (``beliefs (B, V, S)``, ``rounds (B,)``, ``converged (B,)``, ...).
-    Per-graph convergence is exact: a converged graph's body becomes a no-op
-    (frontier zeroed, rounds/updates frozen) while stragglers finish, so
-    each slice equals ``run_bp(batch.graph(i), scheduler, keys[i], ...)``.
-
-    ``rng`` is either one base key (split into per-graph keys) or a ``(B,)``
-    key array. ``update_fn`` is the single-graph update (reference or
-    ``make_pallas_update``); it runs once per round on the bucket's
-    disjoint-union fold, covering all B graphs in one pass / one kernel
-    launch. ``batch_update_fn`` overrides it with a natively batched update
-    on the full ``(B, E, S)`` block.
+    Exact-trajectory parity with the historic one-``while_loop``
+    implementation (the engine runs the same gated body); returns a
+    ``BPResult`` whose every field carries a leading batch axis, each slice
+    equal to the graph's solo ``run_bp`` trajectory.
     """
-    bpgm = batch.pgm
-    b, e = batch.size, batch.n_edges
-    s = batch.n_states_max
-    keys0 = batch_keys(rng, b)
-    if batch_update_fn is None:
-        union = batch.folded()
-
-        def batch_update_fn(_, logm):
-            cand, r = update_fn(union, logm.reshape(b * e, s))
-            return cand.reshape(b, e, s), r.reshape(b, e)
-
-    logm0 = jax.vmap(M.init_messages)(bpgm)                    # (B, E, S)
-    hist0 = jnp.full((b, max_rounds if track_history else 1), -1, jnp.int32)
-    select = jax.vmap(
-        lambda p, r, k, s, u: scheduler.select(p, r, eps, k, s, u))
-    commit = jax.vmap(partial(M.apply_frontier, damping=damping))
-
-    def cond(carry):
-        _, _, _, rounds, done, _, _, _ = carry
-        return jnp.any((~done) & (rounds < max_rounds))
-
-    def body(carry):
-        logm, sstate, keys, rounds, done, updates, hist, _ = carry
-        split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
-        keys, sel_keys = split[:, 0], split[:, 1]
-        cand, r = batch_update_fn(bpgm, logm)
-        unconverged = jnp.sum((r >= eps) & bpgm.edge_mask,
-                              axis=1).astype(jnp.int32)        # (B,)
-        frontier, sstate = select(bpgm, r, sel_keys, sstate, unconverged)
-        newly_done = unconverged == 0
-        frontier = frontier & ~newly_done[:, None]
-        logm = commit(logm, cand, frontier)
-        for _ in range(scheduler.inner_sweeps - 1):
-            cand, _ = batch_update_fn(bpgm, logm)
-            logm = commit(logm, cand, frontier)
-        updates = updates + jnp.sum(frontier, axis=1).astype(jnp.float32) \
-            * scheduler.inner_sweeps
-        if track_history:
-            hist = jax.vmap(lambda h, i, u: h.at[i].set(u))(
-                hist, rounds, unconverged)
-        rounds = rounds + jnp.where(newly_done, 0,
-                                    jnp.int32(scheduler.inner_sweeps))
-        max_r = jnp.max(r, axis=1)
-        return (logm, sstate, keys, rounds, newly_done, updates, hist, max_r)
-
-    sstate0 = jax.vmap(scheduler.init)(bpgm)
-    carry0 = (logm0, sstate0, keys0, jnp.zeros((b,), jnp.int32),
-              jnp.zeros((b,), bool), jnp.zeros((b,), jnp.float32), hist0,
-              jnp.full((b,), jnp.inf, jnp.float32))
-    logm, sstate, _, rounds, done, updates, hist, max_r = jax.lax.while_loop(
-        cond, body, carry0)
-    return BPResult(beliefs=jax.vmap(M.beliefs)(bpgm, logm), logm=logm,
-                    rounds=rounds, updates=updates, converged=done,
-                    max_residual=max_r, unconverged_history=hist,
-                    sched_state=sstate)
+    from repro.core.engine import BPConfig, BPEngine
+    _deprecated("run_bp_batch")
+    cfg = BPConfig(scheduler=scheduler, eps=eps, max_rounds=max_rounds,
+                   damping=damping,
+                   backend=update_fn if update_fn is not None else "ref",
+                   batch_backend=batch_update_fn, history=track_history)
+    return BPEngine(cfg).run(batch, rng)
 
 
 def run_bp_many(pgms: Sequence[PGM],
@@ -285,16 +251,20 @@ def run_bp_many(pgms: Sequence[PGM],
                 *,
                 growth: float = 2.0,
                 max_batch: int | None = None,
-                **bp_kwargs: Any) -> List[BPResult]:
-    """Bucket ``pgms``, run each bucket through ``run_bp_batch``, and return
-    per-graph results in input order. Per-graph keys are ``fold_in(rng, i)``
-    over the *input* position, so results are independent of bucketing.
-    """
-    results: List[BPResult | None] = [None] * len(pgms)
-    for bucket in bucket_pgms(pgms, growth=growth, max_batch=max_batch):
-        keys = jnp.stack([jax.random.fold_in(rng, i)
-                          for i in bucket.indices])
-        res = run_bp_batch(bucket.batch, scheduler, keys, **bp_kwargs)
-        for j, gi in enumerate(bucket.indices):
-            results[gi] = jax.tree.map(lambda x: x[j], res)
-    return results  # type: ignore[return-value]
+                **bp_kwargs: Any):
+    """Deprecated wrapper: ``BPEngine(BPConfig(...)).run_many(pgms, rng)``
+    (or ``.serve(...)`` for the evacuating path). Per-graph keys are
+    ``fold_in(rng, input position)``, independent of bucketing."""
+    from repro.core.engine import BPConfig, BPEngine
+    _deprecated("run_bp_many")
+    cfg = BPConfig(scheduler=scheduler,
+                   eps=bp_kwargs.pop("eps", 1e-3),
+                   max_rounds=bp_kwargs.pop("max_rounds", 2000),
+                   damping=bp_kwargs.pop("damping", 0.0),
+                   backend=bp_kwargs.pop("update_fn", None) or "ref",
+                   batch_backend=bp_kwargs.pop("batch_update_fn", None),
+                   history=bp_kwargs.pop("track_history", False))
+    if bp_kwargs:
+        raise TypeError(f"unknown arguments: {sorted(bp_kwargs)}")
+    return BPEngine(cfg).run_many(pgms, rng, growth=growth,
+                                  max_batch=max_batch)

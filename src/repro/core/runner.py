@@ -1,52 +1,32 @@
-"""Frontier-based BP runner (paper Algorithm 1) as one ``lax.while_loop``.
+"""Deprecated single-graph entry point for frontier-based BP.
 
-Each loop round performs:
-  1. one full candidate pass  cand = f_BP(m)          (all edges; static shape)
-  2. residuals r = ||cand - m||_inf                   (Eq. 4)
-  3. unconverged = #{r >= eps}  -> IsConverged
-  4. frontier   = scheduler.select(r, ...)            -> GenerateFrontier
-  5. m          = where(frontier, cand, m)            -> Update
+The loop (paper Algorithm 1) lives in ``repro.core.engine``; ``run_bp`` is a
+thin compatibility wrapper with exact-trajectory parity -- the engine runs
+the identical ``lax.while_loop`` body, so ``logm``/``rounds``/``updates``
+match the historic implementation bit-for-bit. New code should use::
 
-On the GPU the frontier is compacted so small frontiers cost less; under XLA
-SPMD shapes are static, so a round costs one full sweep regardless of
-frontier size. We therefore report both ``rounds`` (bulk sweeps == wall-time
-proxy) and ``updates`` (committed messages == useful-work proxy); the paper's
-speed claims map to ``rounds`` and its work-efficiency claims to ``updates``.
+    engine = BPEngine(BPConfig(scheduler="rnbp", eps=1e-3, max_rounds=2000))
+    res = engine.run(pgm, rng)
 
-A fixed-size history buffer records per-round unconverged counts so the
-cumulative-convergence figures (paper Figs 2/4) can be reproduced without
-host round-trips.
+and, for resumable execution, ``engine.init`` / ``engine.step`` instead of
+the old ``_init_logm``/``_init_state`` backdoor (still honored here for
+callers that carried state manually).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import messages as M
+from repro.core.engine import BPConfig, BPEngine, BPResult  # noqa: F401
 from repro.core.graph import PGM
 from repro.core.schedulers.base import Scheduler
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class BPResult:
-    beliefs: jax.Array          # (V, S) log-marginals
-    logm: jax.Array             # (E, S) final messages
-    rounds: jax.Array           # () int32: bulk sweeps executed
-    updates: jax.Array          # () int64-ish f32: total committed messages
-    converged: jax.Array        # () bool
-    max_residual: jax.Array     # () f32 at exit
-    unconverged_history: jax.Array  # (max_rounds,) int32, -1 past exit
-    sched_state: Any            # scheduler carry (for chunked resume)
-
-
-@partial(jax.jit, static_argnames=("scheduler", "max_rounds", "damping",
-                                   "update_fn", "track_history"))
 def run_bp(pgm: PGM,
            scheduler: Scheduler,
            rng: jax.Array,
@@ -58,42 +38,17 @@ def run_bp(pgm: PGM,
            track_history: bool = True,
            _init_logm: jax.Array | None = None,
            _init_state: Any = None) -> BPResult:
-    logm0 = M.init_messages(pgm) if _init_logm is None else _init_logm
-    hist0 = jnp.full((max_rounds if track_history else 1,), -1, jnp.int32)
-
-    def cond(carry):
-        _, _, _, rounds, done, _, _, _ = carry
-        return (~done) & (rounds < max_rounds)
-
-    def body(carry):
-        logm, sstate, rng, rounds, done, updates, hist, _ = carry
-        rng, sel_key = jax.random.split(rng)
-        cand, r = update_fn(pgm, logm)
-        unconverged = jnp.sum((r >= eps) & pgm.edge_mask).astype(jnp.int32)
-        frontier, sstate = scheduler.select(pgm, r, eps, sel_key, sstate,
-                                            unconverged)
-        # Converged -> commit nothing (IsConverged precedes Update in Alg. 1).
-        newly_done = unconverged == 0
-        frontier = frontier & ~newly_done
-        logm = M.apply_frontier(logm, cand, frontier, damping)
-        # Residual Splash: h-1 extra masked sweeps inside the same frontier.
-        for _ in range(scheduler.inner_sweeps - 1):
-            cand, _ = update_fn(pgm, logm)
-            logm = M.apply_frontier(logm, cand, frontier, damping)
-        updates = updates + jnp.sum(frontier).astype(jnp.float32) \
-            * scheduler.inner_sweeps
-        if track_history:
-            hist = hist.at[rounds].set(unconverged)
-        rounds = rounds + jnp.where(newly_done, 0,
-                                    jnp.int32(scheduler.inner_sweeps))
-        max_r = jnp.max(r)
-        return (logm, sstate, rng, rounds, newly_done, updates, hist, max_r)
-
-    sstate0 = scheduler.init(pgm) if _init_state is None else _init_state
-    carry0 = (logm0, sstate0, rng, jnp.int32(0),
-              jnp.asarray(False), jnp.float32(0.0), hist0, jnp.float32(jnp.inf))
-    logm, sstate, _, rounds, done, updates, hist, max_r = jax.lax.while_loop(
-        cond, body, carry0)
-    return BPResult(beliefs=M.beliefs(pgm, logm), logm=logm, rounds=rounds,
-                    updates=updates, converged=done, max_residual=max_r,
-                    unconverged_history=hist, sched_state=sstate)
+    """Deprecated wrapper: ``BPEngine(BPConfig(...)).run(pgm, rng)``."""
+    warnings.warn(
+        "run_bp is deprecated: use repro.core.BPEngine with a BPConfig "
+        "(config-driven scheduler/backend, chunked resume via init/step)",
+        DeprecationWarning, stacklevel=2)
+    engine = BPEngine(BPConfig(
+        scheduler=scheduler, eps=eps, max_rounds=max_rounds, damping=damping,
+        backend=update_fn, history=track_history))
+    state = engine.init(pgm, rng)
+    if _init_logm is not None:
+        state = dataclasses.replace(state, logm=_init_logm)
+    if _init_state is not None:
+        state = dataclasses.replace(state, sched_state=_init_state)
+    return engine.run(pgm, state=state)

@@ -1,15 +1,28 @@
 """Message schedulings studied in the paper (Table IV).
 
-| Algorithm  | Frontier selection            | Module   |
-|------------|-------------------------------|----------|
-| LBP        | all messages                  | lbp.py   |
-| RBP        | sort-and-select top-k (edges) | rbp.py   |
-| RS         | top-k vertices + depth-h splash | rs.py  |
-| RnBP       | eps-filter + randomized p     | rnbp.py  | (paper's contribution)
+| Algorithm  | Frontier selection            | Module   | Spec     |
+|------------|-------------------------------|----------|----------|
+| LBP        | all messages                  | lbp.py   | "lbp"    |
+| RBP        | sort-and-select top-k (edges) | rbp.py   | "rbp"    |
+| RS         | top-k vertices + depth-h splash | rs.py  | "rs"     |
+| RnBP       | eps-filter + randomized p     | rnbp.py  | "rnbp"   | (paper's contribution)
+
+Schedulers are interchangeable priority policies behind one inference loop
+(the framing of Aksenov et al. and Elidan et al.), so they are addressable
+by *string spec* through a registry: ``get_scheduler("rnbp", low_p=0.4)``.
+This keeps ``repro.core.engine.BPConfig`` serializable end-to-end -- a
+config that crossed a process boundary as JSON reconstructs the same
+scheduler.
 
 Serial RBP (the paper's SRBP baseline, Boost Fibonacci-heap) lives in
-``repro.core.serial`` as a host-side numpy implementation.
+``repro.core.serial`` as a host-side numpy implementation; it is not a
+``Scheduler`` (it owns its own loop) and is reached via
+``BPConfig(scheduler="srbp")`` instead of this registry.
 """
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Type
 
 from repro.core.schedulers.base import Scheduler
 from repro.core.schedulers.lbp import LBP
@@ -17,4 +30,57 @@ from repro.core.schedulers.rbp import RBP
 from repro.core.schedulers.rs import RS
 from repro.core.schedulers.rnbp import RnBP
 
-__all__ = ["Scheduler", "LBP", "RBP", "RS", "RnBP"]
+#: name -> Scheduler class. Names are the canonical serialized form.
+SCHEDULERS: Dict[str, Type] = {
+    "lbp": LBP,
+    "rbp": RBP,
+    "rs": RS,
+    "rnbp": RnBP,
+}
+
+
+def register_scheduler(name: str) -> Callable[[Type], Type]:
+    """Class decorator registering a scheduler under ``name`` (lowercased).
+
+    The class must satisfy the ``Scheduler`` protocol and be constructible
+    from keyword arguments (so string specs stay serializable)."""
+    key = name.lower()
+
+    def deco(cls: Type) -> Type:
+        SCHEDULERS[key] = cls
+        return cls
+
+    return deco
+
+
+def get_scheduler(spec, **kwargs) -> Scheduler:
+    """Resolve a scheduler spec: a registry name (+ constructor kwargs) or an
+    already-built ``Scheduler`` instance (kwargs must then be empty)."""
+    if isinstance(spec, str):
+        key = spec.lower()
+        if key == "srbp":
+            raise ValueError(
+                "'srbp' is the host-serial baseline, not a frontier "
+                "scheduler; use BPEngine(BPConfig(scheduler='srbp')).run()")
+        if key not in SCHEDULERS:
+            raise KeyError(f"unknown scheduler {spec!r}; registered: "
+                           f"{sorted(SCHEDULERS)}")
+        return SCHEDULERS[key](**kwargs)
+    if kwargs:
+        raise ValueError("scheduler kwargs only apply to string specs, got "
+                         f"instance {type(spec).__name__} plus {kwargs}")
+    return spec
+
+
+def scheduler_spec(sched: Scheduler):
+    """Inverse of ``get_scheduler`` for registered types:
+    ``(name, kwargs_dict)``. Raises KeyError for unregistered classes."""
+    import dataclasses
+    for name, cls in SCHEDULERS.items():
+        if type(sched) is cls:
+            return name, dataclasses.asdict(sched)
+    raise KeyError(f"{type(sched).__name__} is not a registered scheduler")
+
+
+__all__ = ["Scheduler", "LBP", "RBP", "RS", "RnBP", "SCHEDULERS",
+           "get_scheduler", "register_scheduler", "scheduler_spec"]

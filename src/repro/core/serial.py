@@ -100,11 +100,13 @@ class _SerialBP:
         return np.where(self.smask, b - z, NEG_INF)
 
 
-def run_srbp(pgm: PGM, *, eps: float = 1e-3,
+def srbp_run(pgm: PGM, *, eps: float = 1e-3,
              max_updates: int = 10_000_000,
              time_limit_s: float = 90.0) -> SRBPResult:
     """Greedy max-residual serial BP (paper gives SRBP 90 s before declaring
-    non-convergence -- same default here)."""
+    non-convergence -- same default here). Reached through the unified API
+    as ``BPEngine(BPConfig(scheduler="srbp", scheduler_kwargs={...})).run``.
+    """
     bp = _SerialBP(pgm)
     stamp = np.zeros(bp.logm.shape[0], np.int64)
     heap: list = []
@@ -146,3 +148,17 @@ def run_srbp(pgm: PGM, *, eps: float = 1e-3,
                       converged=converged,
                       wall_time_s=time.perf_counter() - t0,
                       max_residual=float(max_r))
+
+
+def run_srbp(pgm: PGM, *, eps: float = 1e-3,
+             max_updates: int = 10_000_000,
+             time_limit_s: float = 90.0) -> SRBPResult:
+    """Deprecated wrapper: use
+    ``BPEngine(BPConfig(scheduler="srbp", eps=...,
+    scheduler_kwargs={"time_limit_s": ...})).run(pgm)``."""
+    import warnings
+    warnings.warn(
+        "run_srbp is deprecated: use repro.core.BPEngine with "
+        "BPConfig(scheduler='srbp')", DeprecationWarning, stacklevel=2)
+    return srbp_run(pgm, eps=eps, max_updates=max_updates,
+                    time_limit_s=time_limit_s)

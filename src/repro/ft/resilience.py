@@ -17,27 +17,27 @@ scale:
    the paper's own argument; training: flag the step for the health log and
    optionally skip the optimizer commit).
 
-3. **run_bp_resilient** -- chunked BP execution: instead of one unbounded
-   ``while_loop``, run ``rounds_per_chunk`` at a time, checkpoint
-   (messages, scheduler state, round) between chunks, and resume from the
-   last chunk on crash. Convergence is monotone in useful work, so chunked
-   restart loses at most one chunk of progress.
+3. **run_bp_resilient** -- chunked BP execution on ``BPEngine.step``:
+   instead of one unbounded ``while_loop``, run ``rounds_per_chunk`` at a
+   time, checkpoint the full ``BPState`` (messages, scheduler state, RNG
+   stream, counters) between chunks, and resume from the last chunk on
+   crash. Because ``step`` carries the whole trajectory, the chunked run is
+   *bit-identical* to the monolithic one, and a crash-restart loses at most
+   one chunk of progress.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, restore_pytree, save_pytree
-from repro.core import messages as M
+from repro.core.engine import BPConfig, BPEngine, BPState
 from repro.core.graph import PGM
-from repro.core.runner import run_bp
 
 
 class ElasticMesh:
@@ -83,39 +83,76 @@ class StragglerMonitor:
         return straggler
 
 
+def _state_payload(state: BPState) -> dict:
+    """Checkpointable view of a ``BPState`` (typed RNG keys -> raw data;
+    the graph itself is not persisted -- the caller re-supplies it)."""
+    return {"logm": state.logm, "sstate": state.sched_state,
+            "rng": jax.random.key_data(state.rng), "rounds": state.rounds,
+            "done": state.done, "updates": state.updates,
+            "hist": state.unconverged_history,
+            "max_residual": state.max_residual}
+
+
+def _restore_state(state: BPState, payload: dict) -> BPState:
+    return dataclasses.replace(
+        state, logm=payload["logm"], sched_state=payload["sstate"],
+        rng=jax.random.wrap_key_data(jnp.asarray(payload["rng"])),
+        rounds=jnp.asarray(payload["rounds"]),
+        done=jnp.asarray(payload["done"]),
+        updates=jnp.asarray(payload["updates"]),
+        unconverged_history=jnp.asarray(payload["hist"]),
+        max_residual=jnp.asarray(payload["max_residual"]))
+
+
 def run_bp_resilient(pgm: PGM, scheduler, rng: jax.Array, *,
                      eps: float = 1e-3, max_rounds: int = 4000,
                      rounds_per_chunk: int = 200,
                      ckpt_dir: Optional[str] = None,
                      monitor: Optional[StragglerMonitor] = None):
-    """Chunked, checkpointed BP. Returns the same BPResult as run_bp.
+    """Chunked, checkpointed BP on the engine's resumable ``step`` API.
 
-    Resumes from ``ckpt_dir`` if it holds a newer chunk (crash recovery).
+    Returns the same ``BPResult`` as a monolithic run (``rounds`` counts
+    only rounds executed by *this* call, so a crash-resume of a finished
+    run reports 0). Resumes from ``ckpt_dir`` if it holds a newer chunk.
+    Unlike the pre-engine implementation, the chunked trajectory is
+    bit-identical to the monolithic one: ``BPState`` carries the RNG stream
+    across chunk boundaries instead of re-seeding per chunk.
     """
-    logm = M.init_messages(pgm)
-    sstate = scheduler.init(pgm)
-    done_rounds = 0
+    engine = BPEngine(BPConfig(scheduler=scheduler, eps=eps,
+                               max_rounds=max_rounds,
+                               chunk_rounds=rounds_per_chunk))
+    state = engine.init(pgm, rng)
+    base_rounds = 0
     if ckpt_dir is not None and (step := latest_step(ckpt_dir)) is not None:
-        like = {"logm": logm, "sstate": sstate}
-        restored, extra = restore_pytree(ckpt_dir, step, like)
-        logm, sstate = restored["logm"], restored["sstate"]
-        done_rounds = int(extra["rounds"])
-    result = None
-    while done_rounds < max_rounds:
+        shape_of = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        try:
+            payload, extra = restore_pytree(ckpt_dir, step,
+                                            shape_of(_state_payload(state)))
+            state = _restore_state(state, payload)
+        except KeyError:
+            # Legacy pre-engine checkpoint: only {logm, sstate} were saved.
+            # Resume the messages/scheduler state; counters come from the
+            # manifest and the RNG stream restarts (the old per-chunk
+            # re-seeding semantics) -- strictly better than crashing the
+            # crash-recovery path on a format change.
+            legacy, extra = restore_pytree(
+                ckpt_dir, step,
+                shape_of({"logm": state.logm, "sstate": state.sched_state}))
+            state = dataclasses.replace(
+                state, logm=jnp.asarray(legacy["logm"]),
+                sched_state=jax.tree.map(jnp.asarray, legacy["sstate"]),
+                rounds=jnp.int32(min(int(extra["rounds"]), max_rounds)))
+        base_rounds = int(state.rounds)
+    while not engine.finished(state):
         t0 = time.perf_counter()
-        chunk = min(rounds_per_chunk, max_rounds - done_rounds)
-        result = run_bp(pgm, scheduler, jax.random.fold_in(rng, done_rounds),
-                        eps=eps, max_rounds=chunk, damping=0.0,
-                        _init_logm=logm, _init_state=sstate)
-        jax.block_until_ready(result.logm)
+        state = engine.step(state)
+        jax.block_until_ready(state.logm)
         if monitor is not None:
             monitor.record(time.perf_counter() - t0)
-        logm, sstate = result.logm, result.sched_state
-        done_rounds += int(result.rounds)
         if ckpt_dir is not None:
-            save_pytree(ckpt_dir, done_rounds,
-                        {"logm": logm, "sstate": sstate},
-                        extra={"rounds": done_rounds})
-        if bool(result.converged) or int(result.rounds) == 0:
-            break
-    return result
+            save_pytree(ckpt_dir, int(state.rounds), _state_payload(state),
+                        extra={"rounds": int(state.rounds)})
+    result = engine.result(state)
+    return dataclasses.replace(
+        result, rounds=result.rounds - jnp.int32(base_rounds))

@@ -85,8 +85,8 @@ def pallas_update_batch(bpgm: PGM, logm: jax.Array, *,
 
 
 def make_pallas_update_batch(interpret: bool | None = None):
-    """``batch_update_fn`` closure for ``run_bp_batch``: whole-bucket fused
-    message update in one kernel launch."""
+    """``batch_update_fn`` closure for the engine's batched path: whole-
+    bucket fused message update in one kernel launch."""
     if interpret is None:
         interpret = not _on_tpu()
 
@@ -94,3 +94,31 @@ def make_pallas_update_batch(interpret: bool | None = None):
         return pallas_update_batch(bpgm, logm, interpret=interpret)
 
     return batch_update_fn
+
+
+# ------------------------------------------------- backend registry ------
+# Message-update backends addressable by BPConfig.backend string. "ref" is
+# the pure-jnp oracle; "pallas" the fused kernel (interpret-mode off-TPU).
+# Batched entries return a natively batched (B, E, S) update; the engine's
+# default batched path instead folds the bucket and reuses the single-graph
+# backend, so only register a batched entry when it beats the fold.
+
+UPDATE_BACKENDS = {
+    "ref": lambda: M.ref_update,
+    "pallas": make_pallas_update,
+}
+
+BATCH_UPDATE_BACKENDS = {
+    "pallas": make_pallas_update_batch,
+}
+
+
+def get_update_fn(name: str, *, batched: bool = False, **kwargs):
+    """Resolve a backend name to an update callable (see registries above).
+    ``kwargs`` (e.g. ``interpret=``) pass through to the factory."""
+    registry = BATCH_UPDATE_BACKENDS if batched else UPDATE_BACKENDS
+    if name not in registry:
+        kind = "batched " if batched else ""
+        raise KeyError(f"unknown {kind}update backend {name!r}; "
+                       f"registered: {sorted(registry)}")
+    return registry[name](**kwargs)

@@ -1,9 +1,9 @@
-"""Batched multi-graph engine (repro.core.batch) vs per-graph run_bp.
+"""Batched multi-graph engine (bucketed BPEngine) vs per-graph runs.
 
 The contract under test: a graph inside a padded bucket reproduces its solo
-``run_bp`` trajectory -- same rounds, same committed messages, beliefs equal
-to float tolerance -- for every scheduler, and the disjoint-union fold /
-Pallas batch path match the reference update.
+trajectory -- same rounds, same committed messages, beliefs equal to float
+tolerance -- for every scheduler, and the disjoint-union fold / Pallas batch
+path match the reference update.
 """
 
 import math
@@ -13,13 +13,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (LBP, RBP, RS, RnBP, BatchedPGM, batch_keys,
-                        bucket_pgms, messages as M, pad_pgm, run_bp,
-                        run_bp_batch, run_bp_many)
+from repro.core import (BPConfig, BPEngine, LBP, RBP, RS, RnBP, BatchedPGM,
+                        batch_keys, bucket_pgms, messages as M, pad_pgm)
 from repro.kernels.ops import make_pallas_update_batch, pallas_update_batch
 from repro.pgm import chain_graph, ising_grid, loop_graph, protein_like_graph
 
 SCHEDULERS = [LBP(), RBP(p=1.0 / 16), RS(p=0.05), RnBP(low_p=0.4, high_p=0.9)]
+
+
+def engine(sched, **cfg) -> BPEngine:
+    return BPEngine(BPConfig(scheduler=sched, **cfg))
 
 
 def mixed_pgms():
@@ -41,24 +44,25 @@ class TestBatchParity:
         batch = BatchedPGM.from_pgms(pgms)
         assert batch.size == 16
         keys = batch_keys(jax.random.key(0), batch)
-        res = run_bp_batch(batch, sched, keys, eps=1e-4, max_rounds=600)
+        eng = engine(sched, eps=1e-4, max_rounds=600, history=False)
+        res = eng.run(batch, keys)
         for i in range(batch.size):
-            solo = run_bp(batch.graph(i), sched, keys[i], eps=1e-4,
-                          max_rounds=600, track_history=False)
+            solo = eng.run(batch.graph(i), keys[i])
             assert int(res.rounds[i]) == int(solo.rounds), f"graph {i}"
             assert bool(res.converged[i]) == bool(solo.converged)
             assert _belief_diff(res.beliefs[i], solo.beliefs) < 1e-5, \
                 f"graph {i}"
 
     def test_padding_is_inert(self):
-        """run_bp on a bucket-padded graph == run_bp on the original
+        """BP on a bucket-padded graph == BP on the original
         (LBP: deterministic, shape-independent selection)."""
         pgm = ising_grid(7, 2.0, seed=3)
         padded = pad_pgm(pgm, n_edges=pgm.n_edges + 256,
                          n_vertices=pgm.n_vertices + 16,
                          n_states=pgm.n_states_max + 3)
-        a = run_bp(pgm, LBP(), jax.random.key(0), eps=1e-4)
-        b = run_bp(padded, LBP(), jax.random.key(0), eps=1e-4)
+        eng = engine(LBP(), eps=1e-4)
+        a = eng.run(pgm, jax.random.key(0))
+        b = eng.run(padded, jax.random.key(0))
         assert int(a.rounds) == int(b.rounds)
         v, s = pgm.n_real_vertices, pgm.n_states_max
         np.testing.assert_allclose(np.asarray(a.beliefs[:v]),
@@ -69,8 +73,8 @@ class TestBatchParity:
         pgms = [chain_graph(20, seed=1), ising_grid(9, 2.5, seed=11)]
         batch = BatchedPGM.from_pgms(pgms)
         keys = batch_keys(jax.random.key(2), batch)
-        res = run_bp_batch(batch, RnBP(low_p=0.4, high_p=0.9), keys,
-                           eps=1e-4, max_rounds=800)
+        res = engine(RnBP(low_p=0.4, high_p=0.9), eps=1e-4,
+                     max_rounds=800, history=False).run(batch, keys)
         r = np.asarray(res.rounds)
         assert bool(res.converged[0]) and bool(res.converged[1])
         assert r[0] < r[1]  # the chain converged first and froze
@@ -101,12 +105,11 @@ class TestBucketing:
         buckets = bucket_pgms(pgms, max_batch=3)
         assert [len(b.indices) for b in buckets] == [3, 3, 1]
 
-    def test_run_bp_many_order_and_bucket_invariance(self):
+    def test_run_many_order_and_bucket_invariance(self):
         pgms = mixed_pgms()
-        res_fine = run_bp_many(pgms, LBP(), jax.random.key(0), eps=1e-4,
-                               max_rounds=600)
-        res_one = run_bp_many(pgms, LBP(), jax.random.key(0), eps=1e-4,
-                              max_rounds=600, growth=math.inf)
+        eng = engine(LBP(), eps=1e-4, max_rounds=600, history=False)
+        res_fine = eng.run_many(pgms, jax.random.key(0))
+        res_one = eng.run_many(pgms, jax.random.key(0), growth=math.inf)
         assert len(res_fine) == len(pgms)
         for i, pgm in enumerate(pgms):
             assert bool(res_fine[i].converged)
@@ -152,8 +155,10 @@ class TestFoldedUpdates:
         batch = BatchedPGM.from_pgms([ising_grid(6, 2.0, seed=s)
                                       for s in range(3)])
         keys = batch_keys(jax.random.key(1), batch)
-        ref = run_bp_batch(batch, RnBP(), keys, eps=1e-4, max_rounds=400)
-        ker = run_bp_batch(batch, RnBP(), keys, eps=1e-4, max_rounds=400,
-                           batch_update_fn=make_pallas_update_batch(True))
+        ref = engine(RnBP(), eps=1e-4, max_rounds=400,
+                     history=False).run(batch, keys)
+        ker = engine(RnBP(), eps=1e-4, max_rounds=400, history=False,
+                     batch_backend=make_pallas_update_batch(True)
+                     ).run(batch, keys)
         assert bool(jnp.all(ker.converged))
         assert _belief_diff(ker.beliefs, ref.beliefs) < 1e-3

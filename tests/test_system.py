@@ -148,6 +148,26 @@ class TestFaultTolerance:
                                      ckpt_dir=d)
             assert int(again.rounds) == 0   # crash-resume: nothing to redo
 
+    def test_resilient_bp_restores_legacy_checkpoint(self):
+        """A pre-engine checkpoint ({logm, sstate} only) must resume, not
+        crash the crash-recovery path: messages carry over, the chunked run
+        finishes from there."""
+        from repro.core import BPConfig, BPEngine
+        pgm = ising_grid(10, 2.0, seed=3)
+        sched = RnBP(low_p=0.7)
+        engine = BPEngine(BPConfig(scheduler=sched, eps=1e-4,
+                                   max_rounds=2000, chunk_rounds=10))
+        state = engine.step(engine.init(pgm, jax.random.key(0)))
+        with tempfile.TemporaryDirectory() as d:
+            save_pytree(d, int(state.rounds),
+                        {"logm": state.logm, "sstate": state.sched_state},
+                        extra={"rounds": int(state.rounds)})
+            res = run_bp_resilient(pgm, sched, jax.random.key(0), eps=1e-4,
+                                   max_rounds=2000, rounds_per_chunk=40,
+                                   ckpt_dir=d)
+            assert bool(res.converged)
+            assert int(res.rounds) > 0      # resumed and did new work
+
     def test_straggler_monitor(self):
         mon = StragglerMonitor(budget_factor=2.0)
         assert not mon.record(1.0)

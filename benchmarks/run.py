@@ -11,9 +11,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_batch, bench_correctness, bench_greedy,
-                        bench_kernel, bench_protein, bench_rnbp,
-                        bench_tradeoff)
+from benchmarks import (bench_batch, bench_correctness, bench_dist,
+                        bench_greedy, bench_kernel, bench_protein,
+                        bench_rnbp, bench_tradeoff)
 
 SUITES = {
     "fig2_tradeoff": bench_tradeoff,
@@ -23,6 +23,7 @@ SUITES = {
     "protein": bench_protein,
     "kernel": bench_kernel,
     "batch": bench_batch,
+    "dist": bench_dist,
 }
 
 

@@ -76,19 +76,27 @@ class BatchedPGM:
         """Extract graph ``i`` as a standalone (bucket-padded) PGM."""
         return jax.tree.map(lambda x: x[i], self.pgm)
 
-    def folded(self) -> PGM:
+    def folded(self, mesh=None, *, axis: str = "bp") -> PGM:
         """The bucket as one disjoint-union PGM with B*E edges, B*V
         vertices: graph ``b``'s vertex ``u`` becomes ``b*V + u``. Message
         updates on the union are bitwise those of the member graphs (no
         cross edges; per-vertex segments keep their edge order), so the
         whole bucket rides the unmodified single-graph update path -- one
         segment-sum, one Pallas launch -- with the batch axis folded into
-        the edge axis."""
+        the edge axis.
+
+        With ``mesh`` given (a 1-D ``jax.sharding.Mesh`` whose axis is
+        ``axis``), the folded (B*E,) edge grid is sharding-constrained over
+        the mesh and the small vertex tables replicated, so XLA lays the
+        union out shard-ready for the ``"sharded"`` update backend
+        (``repro.dist``). Per-graph E is a multiple of EDGE_PAD and reverse
+        pairs sit at adjacent even indices, so any even per-shard split of
+        B*E keeps reverse lookups shard-local."""
         p = self.pgm
         b, e, v = self.size, self.n_edges, self.n_vertices
         off_v = (jnp.arange(b, dtype=jnp.int32) * v)[:, None]
         off_e = (jnp.arange(b, dtype=jnp.int32) * e)[:, None]
-        return PGM(
+        union = PGM(
             edge_src=(p.edge_src + off_v).reshape(-1),
             edge_dst=(p.edge_dst + off_v).reshape(-1),
             edge_rev=(p.edge_rev + off_e).reshape(-1),
@@ -99,6 +107,22 @@ class BatchedPGM:
             n_states=p.n_states.reshape(-1),
             n_real_vertices=b * v, n_real_edges=b * e,
             edge_count=jnp.int32(b * e), vertex_count=jnp.int32(b * v))
+        if mesh is None:
+            return union
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        wsc = jax.lax.with_sharding_constraint
+        shard = lambda x, spec: wsc(x, NamedSharding(mesh, spec))
+        edge, rep = P(axis), P(None, None)
+        return dataclasses.replace(
+            union,
+            edge_src=shard(union.edge_src, edge),
+            edge_dst=shard(union.edge_dst, edge),
+            edge_rev=shard(union.edge_rev, edge),
+            edge_mask=shard(union.edge_mask, edge),
+            log_psi_e=shard(union.log_psi_e, P(axis, None, None)),
+            log_psi_v=shard(union.log_psi_v, rep),
+            state_mask=shard(union.state_mask, rep),
+            n_states=shard(union.n_states, P(None)))
 
     @classmethod
     def from_pgms(cls, pgms: Sequence[PGM], *,

@@ -51,12 +51,23 @@ from repro.core.graph import PGM, pad_pgm
 from repro.core.schedulers import get_scheduler
 from repro.core.schedulers.base import Scheduler
 
+__all__ = ["BPConfig", "BPEngine", "BPResult", "BPState", "ServeResult",
+           "ServeStats"]
+
 
 # --------------------------------------------------------------- results --
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BPResult:
+    """Finished-trajectory record returned by ``BPEngine.run``/``result``.
+
+    Shapes below are the single-graph case; on the batched path every field
+    carries a leading ``(B,)`` axis. ``converged`` is True iff every real
+    edge's residual fell below the config's ``eps`` within ``max_rounds``
+    sweeps; ``beliefs`` are valid either way (the best marginals at exit).
+    """
+
     beliefs: jax.Array          # (V, S) log-marginals ((B, V, S) batched)
     logm: jax.Array             # (E, S) final messages
     rounds: jax.Array           # () int32: bulk sweeps executed
@@ -255,7 +266,10 @@ def _chunk_batch(batch: BatchedPGM, carry, limit, eps, *,
     b, e = batch.size, batch.n_edges
     s = batch.n_states_max
     if batch_update_fn is None:
-        union = batch.folded()
+        # Mesh-aware fold: a sharded backend (repro.dist) advertises its
+        # mesh, and the (B*E) union grid is laid out across it.
+        union = batch.folded(mesh=getattr(update_fn, "mesh", None),
+                             axis=getattr(update_fn, "axis", "bp"))
 
         def batch_update_fn(_, logm):
             cand, r = update_fn(union, logm.reshape(b * e, s))
@@ -383,6 +397,10 @@ class ServeStats:
 
 @dataclasses.dataclass
 class ServeResult:
+    """``BPEngine.serve`` output: one ``BPResult`` per request (input
+    order, each sliced to single-graph shapes) plus the run's sweep
+    accounting (``ServeStats``)."""
+
     results: List[BPResult]     # per-request, input order
     stats: ServeStats
 

@@ -94,6 +94,21 @@ def compute_candidates(pgm: PGM, logm: jax.Array,
     return normalize_messages(pgm, cand)
 
 
+def normalize_and_residual(cand: jax.Array, logm: jax.Array,
+                           dst_mask: jax.Array, edge_mask: jax.Array):
+    """Shared tail of the jnp update paths (``ref_update`` and both
+    ``repro.dist`` backends): normalize raw candidates (LSE over valid
+    destination states -> 0, invalid states NEG_INF) and compute the (E,)
+    L-inf residual vs the current messages (0 on padded edges). Takes
+    explicit masks instead of a PGM so shard-local edge slices run the
+    exact single-device math."""
+    z = masked_logsumexp(cand, dst_mask, axis=1)
+    cand = jnp.where(dst_mask, cand - z[:, None], NEG_INF)
+    d = jnp.where(dst_mask, jnp.abs(cand - logm), 0.0)
+    resid = jnp.where(edge_mask, jnp.max(d, axis=1), 0.0)
+    return cand, resid
+
+
 def residuals(pgm: PGM, logm: jax.Array, cand: jax.Array) -> jax.Array:
     """(E,) L-inf residual per directed edge; 0 on padded edges."""
     dst_mask = pgm.state_mask[pgm.edge_dst]
@@ -113,8 +128,10 @@ def beliefs(pgm: PGM, logm: jax.Array) -> jax.Array:
 def ref_update(pgm: PGM, logm: jax.Array):
     """One fused BP step: (candidate messages, residuals). Pure-jnp reference;
     the Pallas path (repro.kernels.ops.pallas_update) matches this signature."""
-    cand = compute_candidates(pgm, logm)
-    return cand, residuals(pgm, logm, cand)
+    pre = edge_prelude(pgm, logm)
+    cand = propagate_ref(pgm.log_psi_e, pre)
+    return normalize_and_residual(cand, logm, pgm.state_mask[pgm.edge_dst],
+                                  pgm.edge_mask)
 
 
 # ------------------------------------------------------ max-product (MAP) --

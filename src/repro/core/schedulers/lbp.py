@@ -11,6 +11,15 @@ from repro.core.graph import PGM
 
 @dataclasses.dataclass(frozen=True)
 class LBP:
+    """Loopy (synchronous) BP: the frontier is every real edge, every round.
+
+    ``select`` returns ``(frontier (E,) bool = edge_mask, state)`` -- no
+    carried state, no RNG consumed, so trajectories are deterministic.
+    Maximum parallelism per sweep but no prioritization: converges fast on
+    easy graphs and may oscillate forever on hard ones (paper Fig 4).
+    Registry spec ``"lbp"``.
+    """
+
     inner_sweeps: int = 1
 
     def init(self, pgm: PGM):

@@ -20,6 +20,15 @@ from repro.core.graph import PGM
 
 @dataclasses.dataclass(frozen=True)
 class RBP:
+    """Residual BP, bulk sort-and-select: top-k residual edges per round.
+
+    ``select`` returns the ``k = max(1, p * 2|E|)`` highest-residual real
+    edges as the ``(E,) bool`` frontier (ties at the k-th residual all
+    admitted; the ``lax.top_k`` is the round's dominant cost -- the paper's
+    overhead diagnosis). Deterministic given residuals; no carried state.
+    Strong prioritization, poor parallel occupancy. Registry spec ``"rbp"``.
+    """
+
     p: float = 1.0 / 256.0   # frontier multiplier: k = p * 2|E| (paper SS III-D)
     inner_sweeps: int = 1
 

@@ -28,6 +28,18 @@ from repro.core.graph import PGM
 
 @dataclasses.dataclass(frozen=True)
 class RnBP:
+    """Randomized BP (the paper's contribution): eps-filter + Bernoulli(p)
+    keep, with a two-mode dynamic p.
+
+    ``select`` keeps each unconverged real edge (residual >= eps) with
+    probability ``p`` -- pure elementwise work, no sort. The carried state
+    is the previous round's unconverged count (() f32): when the ratio
+    new/old exceeds ``ratio_threshold`` the run is stalling and ``low_p``
+    (convergence mode) is used, otherwise ``high_p`` (speed mode).
+    Stochastic: consumes one (E,)-shaped uniform draw per round from the
+    engine's RNG stream. Registry spec ``"rnbp"``.
+    """
+
     low_p: float = 0.7
     high_p: float = 1.0
     ratio_threshold: float = 0.9

@@ -22,6 +22,17 @@ from repro.core.graph import PGM
 
 @dataclasses.dataclass(frozen=True)
 class RS:
+    """Residual Splash: top-k residual *vertices*, each updated with a
+    depth-``h`` splash (the BFS ball around the root).
+
+    ``select`` returns the ``(E,) bool`` mask of all edges inside the
+    h-hop balls of the ``k = max(1, p * V)`` highest-residual vertices;
+    the runner then applies ``inner_sweeps == h`` masked update passes
+    inside that frontier, reproducing the sequential root-outward walk in
+    bulk-synchronous form. Deterministic; no carried state. Registry spec
+    ``"rs"``.
+    """
+
     p: float = 1.0 / 128.0
     h: int = 2
     inner_sweeps: int = 2  # keep == h

@@ -26,6 +26,11 @@ NEG_INF = -1.0e30
 
 @dataclasses.dataclass
 class SRBPResult:
+    """Host-serial RBP baseline output: ``beliefs (V, S) float64`` log-
+    marginals, the count of single-message ``updates`` executed, and
+    ``converged`` -- True iff the global max residual fell below eps before
+    the update/time budget ran out."""
+
     beliefs: np.ndarray
     updates: int
     converged: bool

@@ -103,9 +103,23 @@ def make_pallas_update_batch(interpret: bool | None = None):
 # default batched path instead folds the bucket and reuses the single-graph
 # backend, so only register a batched entry when it beats the fold.
 
+def _make_sharded_update(**kwargs):
+    # Lazy import: repro.dist builds on the engine, which resolves backends
+    # through this registry -- importing at call time breaks the cycle.
+    from repro.dist import make_sharded_update
+    return make_sharded_update(**kwargs)
+
+
 UPDATE_BACKENDS = {
     "ref": lambda: M.ref_update,
     "pallas": make_pallas_update,
+    # Multi-device shard_map update over the edge axis (repro.dist). With
+    # no kwargs a mesh over all devices is built at resolve time, so
+    # BPConfig(backend="sharded") stays a serializable string. The edge
+    # axis must split evenly over the mesh (padded counts are multiples of
+    # 128, so power-of-two meshes <= 64 always work); run_bp_sharded
+    # re-pads single graphs that don't.
+    "sharded": _make_sharded_update,
 }
 
 BATCH_UPDATE_BACKENDS = {

@@ -1,0 +1,70 @@
+"""Documentation contract: the public API is documented and the docs are
+true. Docstring checks cover every symbol exported from ``repro.core``,
+``repro.core.engine`` and ``repro.dist``; the code blocks in
+``docs/engine.md`` are executed verbatim (they are the engine's living
+spec); relative links between the markdown files must resolve."""
+
+import inspect
+import pathlib
+import re
+
+import pytest
+
+DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs"
+REPO = DOCS.parent
+
+PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.dist"]
+
+
+def _public_objects(modname):
+    mod = pytest.importorskip(modname)
+    assert hasattr(mod, "__all__"), f"{modname} must declare __all__"
+    for name in mod.__all__:
+        yield name, getattr(mod, name)
+
+
+@pytest.mark.parametrize("modname", PUBLIC_MODULES)
+def test_public_symbols_have_real_docstrings(modname):
+    missing = []
+    for name, obj in _public_objects(modname):
+        if not (inspect.isclass(obj) or inspect.isroutine(obj)):
+            continue    # constants, registries, re-exported modules
+        doc = inspect.getdoc(obj) or ""
+        # Reject the dataclass auto-docstring ("Name(field: type = ...)")
+        # and one-word stubs: shapes/semantics need actual sentences.
+        if len(doc) < 40 or doc.startswith(f"{name}("):
+            missing.append(name)
+    assert not missing, f"{modname}: undocumented public symbols: {missing}"
+
+
+def _code_blocks(md_path):
+    text = md_path.read_text()
+    return re.findall(r"```python\n(.*?)```", text, flags=re.DOTALL)
+
+
+def test_engine_md_code_blocks_execute():
+    blocks = _code_blocks(DOCS / "engine.md")
+    assert len(blocks) >= 3, "engine.md lost its executable examples"
+    ns = {}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"docs/engine.md[block {i}]", "exec"), ns)
+        except Exception as e:     # pragma: no cover - failure reporting
+            pytest.fail(f"docs/engine.md block {i} failed: {e!r}\n{block}")
+
+
+@pytest.mark.parametrize("md", ["README.md", "docs/architecture.md",
+                                "docs/schedulers.md", "docs/engine.md",
+                                "docs/sharding.md"])
+def test_relative_links_resolve(md):
+    path = REPO / md
+    broken = []
+    for target in re.findall(r"\]\(([^)#]+?)(?:#[^)]*)?\)", path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.is_relative_to(REPO):
+            continue    # GitHub-UI paths (badge/actions) live off-repo
+        if not resolved.exists():
+            broken.append(target)
+    assert not broken, f"{md}: broken relative links: {broken}"

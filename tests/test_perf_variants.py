@@ -69,11 +69,6 @@ print("OK")
 
 
 class TestBandedBP:
-    @pytest.fixture(autouse=True)
-    def _require_dist(self):
-        pytest.importorskip(
-            "repro.dist", reason="repro.dist (banded BP) not in tree yet")
-
     def test_banded_matches_reference_subprocess(self):
         code = r"""
 import os

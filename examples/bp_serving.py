@@ -2,22 +2,31 @@
 
 The paper's algorithm is an *inference* engine, so the end-to-end driver is
 a serving loop: a stream of PGM inference requests (mixed Ising / chain /
-protein-like graphs) runs through ``BPEngine.serve`` -- requests are grouped
-into shape-homogeneous buckets, each bucket runs as one compiled program,
-and between chunks the engine *evacuates* converged graphs (their results
-are released immediately) and backfills the freed slots from the pending
-queue, so one straggler no longer holds a whole bucket's worth of finished
-work hostage.
+protein-like graphs) runs through the serving pipeline
+(``repro.core.serving``) -- requests are grouped into shape-homogeneous
+buckets, each bucket runs as one compiled program, and between chunks the
+engine *evacuates* converged graphs (their results are released
+immediately) and backfills the freed slots from the pending queue, so one
+straggler no longer holds a whole bucket's worth of finished work hostage.
+
+Default mode reproduces the legacy synchronous ``BPEngine.serve`` cadence
+(one resident bucket, stream staged up front). ``--async`` switches to the
+full pipeline: the request stream is consumed as an *online iterator*,
+host-side padding/`device_put` staging overlaps device chunks across
+double-buffered bucket slots, and once the queue drains the survivors are
+*compacted* into narrower buckets so dead slots stop costing sweeps.
 
 Knobs:
+  --async         online iterator + double-buffered slots + compaction
   --growth        bucketing policy: 2.0 bounds padding waste for steady
                   traffic over few shape families, ``inf`` collapses a
                   shape-diverse cold stream into a single compilation
+                  (sync mode only; online needs per-request shapes)
   --max-batch     resident bucket width (slots that evacuation recycles)
   --chunk-rounds  rounds per device chunk between evacuation sweeps
   --no-evacuate   PR-1 baseline: run every bucket to completion
 
-Run:  PYTHONPATH=src python examples/bp_serving.py [--requests 12]
+Run:  PYTHONPATH=src python examples/bp_serving.py [--async] [--requests 12]
 """
 
 import argparse
@@ -26,7 +35,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import BPConfig, BPEngine
+from repro.core import BPConfig, BPEngine, serve_async
 from repro.pgm import chain_graph, ising_grid, protein_like_graph
 
 
@@ -44,8 +53,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=9)
     ap.add_argument("--eps", type=float, default=1e-3)
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="online pipeline: double-buffered slots, prefetch "
+                         "staging, bucket compaction")
     ap.add_argument("--growth", type=float, default=2.0,
-                    help="bucket edge-ceiling growth factor; inf = 1 bucket")
+                    help="bucket edge-ceiling growth factor; inf = 1 bucket "
+                         "(sync mode only: online bucketing needs "
+                         "per-request shapes)")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="resident bucket width (evacuated slots backfill)")
     ap.add_argument("--chunk-rounds", type=int, default=512,
@@ -60,35 +74,62 @@ def main():
         eps=args.eps, max_rounds=6000, history=False))
 
     t_all = time.perf_counter()
-    stream = list(request_stream(args.requests))
-    kinds = {r[0]: r[1] for r in stream}
-    pgms = [r[2] for r in stream]
-    t_build = time.perf_counter() - t_all
-    print(f"{args.requests} requests (growth={args.growth}, "
-          f"width={args.max_batch}); build {t_build:.2f}s", flush=True)
+    kinds = {}
+    kw = dict(max_batch=args.max_batch, chunk_rounds=args.chunk_rounds,
+              evacuate=not args.no_evacuate)
 
-    rep = engine.serve(pgms, jax.random.key(0), growth=args.growth,
-                       max_batch=args.max_batch,
-                       chunk_rounds=args.chunk_rounds,
-                       evacuate=not args.no_evacuate)
+    if args.async_mode:
+        # Online path: the generator is consumed lazily; each request is
+        # padded + device_put the moment it is pulled (bucket_shape
+        # ceilings), overlapped with the in-flight device chunks.
+        def online():
+            for rid, kind, pgm in request_stream(args.requests):
+                kinds[rid] = kind
+                yield pgm
+        print(f"{args.requests} requests (async pipeline, "
+              f"width={args.max_batch})", flush=True)
+        rep = serve_async(engine, online(), jax.random.key(0),
+                          growth=args.growth, slots=2,
+                          prefetch=2 * args.max_batch, **kw)
+    else:
+        stream = list(request_stream(args.requests))
+        kinds = {r[0]: r[1] for r in stream}
+        pgms = [r[2] for r in stream]
+        t_build = time.perf_counter() - t_all
+        print(f"{args.requests} requests (growth={args.growth}, "
+              f"width={args.max_batch}); build {t_build:.2f}s", flush=True)
+        # Same bitwise results as engine.serve(...) -- the materialized
+        # plan with one resident slot is the legacy driver -- but routed
+        # through the pipeline so per-request latency is recorded.
+        rep = serve_async(engine, pgms, jax.random.key(0),
+                          growth=args.growth, compact=False, slots=1,
+                          prefetch=None, **kw)
 
     done = failed = 0
-    for rid, res in enumerate(rep.results):
-        ok = bool(res.converged)
+    by_rid = {rec.rid: rec for rec in rep.records}
+    for rid in sorted(by_rid):
+        rec = by_rid[rid]
+        ok = bool(rec.result.converged)
         done += ok
         failed += not ok
-        marg = np.exp(np.asarray(res.beliefs[0]))
+        marg = np.exp(np.asarray(rec.result.beliefs[0]))
         print(f"req {rid:3d} {kinds[rid]:14s} "
-              f"{'ok  ' if ok else 'FAIL'} rounds={int(res.rounds):5d} "
+              f"{'ok  ' if ok else 'FAIL'} rounds={int(rec.result.rounds):5d} "
+              f"latency={rec.latency_s * 1e3:8.1f}ms "
+              f"(queue {rec.queue_s * 1e3:7.1f}ms) "
               f"P(x0)={np.round(marg[:2], 3)}", flush=True)
 
     s = rep.stats
     wall = time.perf_counter() - t_all
+    pct = rep.latency_percentiles((50, 95, 99))
     print(f"\nserved {done}/{args.requests} converged "
           f"({failed} unconverged) in {wall:.1f}s "
           f"({args.requests / wall:.1f} graphs/s)")
+    print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+          f"p99={pct['p99']:.1f}")
     print(f"chunks={s.chunks} evacuated={s.evacuated} "
-          f"backfilled={s.backfilled} sweeps: device={s.device_sweeps} "
+          f"backfilled={s.backfilled} compactions={s.compactions} "
+          f"sweeps: device={s.device_sweeps} "
           f"useful={s.useful_sweeps} wasted={s.wasted_sweeps}")
 
 

@@ -7,6 +7,10 @@ Public API (the unified engine):
                      serve (evacuating bucketed serving driver)
   BPState            resumable trajectory state (a checkpointable pytree)
   ServeResult/ServeStats   serving output + sweep accounting
+  serve_async        asynchronous serving pipeline (repro.core.serving):
+                     online request iterators, double-buffered bucket
+                     slots, prefetch staging, bucket compaction
+  ServingPipeline    the pipeline driver behind serve_async (generator API)
   get_scheduler      registry: "lbp"/"rbp"/"rs"/"rnbp" -> Scheduler
 
 Building blocks:
@@ -22,6 +26,8 @@ Deprecated compatibility wrappers (delegate to BPEngine, exact parity):
 from repro.core.graph import PGM, build_pgm, pad_pgm, NEG_INF
 from repro.core.engine import (BPConfig, BPEngine, BPResult, BPState,
                                ServeResult, ServeStats)
+from repro.core.serving import (AsyncServeResult, AsyncServeStats,
+                                RequestRecord, ServingPipeline, serve_async)
 from repro.core.runner import run_bp
 from repro.core.batch import (BatchedPGM, Bucket, batch_keys, bucket_key,
                               bucket_pgms, group_ceilings, run_bp_batch,
@@ -38,6 +44,8 @@ __all__ = [
     "PGM", "build_pgm", "pad_pgm", "NEG_INF",
     "BPConfig", "BPEngine", "BPResult", "BPState",
     "ServeResult", "ServeStats",
+    "AsyncServeResult", "AsyncServeStats", "RequestRecord",
+    "ServingPipeline", "serve_async",
     "BatchedPGM", "Bucket", "batch_keys", "bucket_key", "bucket_pgms",
     "group_ceilings",
     "LBP", "RBP", "RS", "RnBP", "SCHEDULERS", "get_scheduler",

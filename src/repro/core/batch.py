@@ -30,8 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import EDGE_PAD, PGM, pad_pgm_arrays
+from repro.core.graph import EDGE_PAD, PGM, VERTEX_PAD, pad_pgm_arrays
 from repro.core.schedulers.base import Scheduler
+
+__all__ = ["BatchedPGM", "Bucket", "batch_keys", "bucket_key", "bucket_pgms",
+           "bucket_shape", "group_ceilings", "run_bp_batch", "run_bp_many"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -124,6 +127,15 @@ class BatchedPGM:
             state_mask=shard(union.state_mask, rep),
             n_states=shard(union.n_states, P(None)))
 
+    def take(self, indices) -> "BatchedPGM":
+        """Narrow the batch to the given slot ``indices`` (gather along the
+        batch axis) -- the compaction primitive. Static ceilings (treedef)
+        are preserved, so the kept graphs' padded shapes -- and hence their
+        trajectories -- are untouched; only the batch width changes (one
+        recompile per new width)."""
+        ia = jnp.asarray(indices, dtype=jnp.int32)
+        return BatchedPGM(pgm=jax.tree.map(lambda x: x[ia], self.pgm))
+
     @classmethod
     def from_pgms(cls, pgms: Sequence[PGM], *,
                   n_edges: int | None = None,
@@ -182,6 +194,39 @@ def bucket_key(pgm: PGM, growth: float = 2.0) -> tuple:
     else:
         ekey = math.ceil(math.log(e, growth) - 1e-9)
     return (ekey, _pow2_ceil(pgm.n_states_max))
+
+
+def bucket_shape(pgm: PGM, growth: float = 2.0) -> tuple[int, int, int,
+                                                         int, int]:
+    """Per-request deterministic padded-shape ceilings for *online*
+    bucketing: ``(n_edges, n_vertices, n_states, n_real_edges,
+    n_real_vertices)``.
+
+    Unlike ``group_ceilings`` (the materialized-stream policy: joint max
+    over a known group), these depend only on the request itself -- the
+    edge axis takes its ``growth``-factor ceiling (as ``bucket_key``), the
+    vertex and state axes their pow2 ceilings -- so an online server can
+    pad, stage, and batch a request the moment it arrives, and any two
+    requests with equal ceilings share a bucket. The static real-count
+    ceilings are set to the padded ceilings (a valid upper bound; note
+    size-derived scheduler constants like RBP's ``k = p * n_real_edges``
+    then scale with the bucket, not the graph -- the same class of caveat
+    as any re-padding). Requires finite ``growth``: ``inf`` has no
+    per-request shape."""
+    import math
+    if not growth > 1.0 or math.isinf(growth):
+        raise ValueError("online bucketing needs finite growth > 1, got "
+                         f"{growth}")
+    e = max(_round_up(max(pgm.n_real_edges, 1), EDGE_PAD), pgm.n_edges)
+    if growth == 2.0:
+        e_c = _pow2_ceil(e)
+    else:
+        k = math.ceil(math.log(e, growth) - 1e-9)
+        e_c = max(_round_up(int(math.ceil(growth ** k)), EDGE_PAD), e)
+    v_c = _pow2_ceil(max(_round_up(pgm.n_real_vertices + 1, VERTEX_PAD),
+                         pgm.n_vertices))
+    s_c = _pow2_ceil(pgm.n_states_max)
+    return (e_c, v_c, s_c, e_c, v_c)
 
 
 def group_ceilings(pgms: Sequence[PGM]) -> tuple[int, int, int, int, int]:

@@ -23,12 +23,15 @@ stream, round/update counters, history), so N rounds via repeated ``step``
 are bit-identical to N rounds in one ``run`` -- the property the resilience
 layer (repro.ft) and the serving driver both build on.
 
-On the batched path ``step`` returns per-graph convergence, which
-``serve(stream)`` exploits: between chunks, converged graphs are *evacuated*
+On the batched path ``step`` returns per-graph convergence, which the
+serving layer exploits: between chunks, converged graphs are *evacuated*
 (their results released immediately) and their batch slots *backfilled* from
-the pending queue, so straggler rounds stop costing the whole bucket -- the
-ROADMAP's async-serving item. Sweep accounting (device vs useful) quantifies
-the win against the run-every-bucket-to-completion baseline.
+the pending queue, so straggler rounds stop costing the whole bucket. Sweep
+accounting (device vs useful) quantifies the win against the
+run-every-bucket-to-completion baseline. The serving *pipeline* -- online
+request iterators, double-buffered slot dispatch, prefetch staging, bucket
+compaction -- lives in ``repro.core.serving``; ``serve(stream)`` here is its
+synchronous compatibility wrapper.
 
 ``run_bp`` / ``run_bp_batch`` / ``run_bp_many`` / ``run_srbp`` remain as
 deprecated wrappers with exact-trajectory parity (they delegate here).
@@ -37,7 +40,6 @@ deprecated wrappers with exact-trajectory parity (they delegate here).
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from functools import partial
 from typing import Any, Callable, List, Mapping, Sequence, Tuple
 
@@ -45,9 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import messages as M
-from repro.core.batch import (BatchedPGM, batch_keys, bucket_key, bucket_pgms,
-                              group_ceilings)
-from repro.core.graph import PGM, pad_pgm
+from repro.core.batch import BatchedPGM, batch_keys, bucket_pgms
+from repro.core.graph import PGM
 from repro.core.schedulers import get_scheduler
 from repro.core.schedulers.base import Scheduler
 
@@ -552,7 +553,10 @@ class BPEngine:
               growth: float = 2.0, max_batch: int | None = None,
               chunk_rounds: int | None = None,
               evacuate: bool = True) -> ServeResult:
-        """Serve a request stream through rolling, evacuating buckets.
+        """Serve a materialized request stream through rolling, evacuating
+        buckets -- the synchronous compatibility wrapper over
+        ``repro.core.serving`` (one resident bucket, no compaction, stream
+        staged up front: the legacy cadence, chunk for chunk).
 
         Requests are grouped by bucket shape key and padded to their
         *group's* joint ceiling; each group runs as one resident batch of
@@ -573,87 +577,14 @@ class BPEngine:
         that change a graph's padded shape (group ceiling here vs.
         per-sub-bucket max in ``run_many``) can legitimately alter
         RnBP/RBP trajectories -- the fixed point, not the answer quality.
+
+        For online iterators, pipelined host/device overlap, and bucket
+        compaction, use ``repro.core.serving.serve_async`` (bitwise-equal
+        per-request results on the same materialized stream).
         """
-        if self.is_serial:
-            raise NotImplementedError("serve() needs a frontier scheduler")
-        cfg = self.config
-        chunk = (chunk_rounds or cfg.chunk_rounds
-                 or max(1, cfg.max_rounds // 16))
-        pgms = list(stream)
-        results: List[BPResult | None] = [None] * len(pgms)
-        stats = ServeStats()
-        inner = self.scheduler.inner_sweeps
-
-        def run_chunks(state, live):
-            """Step ``state`` one chunk, account sweeps, return host views."""
-            r_before = jax.device_get(state.rounds)
-            state = self.step(state, chunk_rounds=chunk)
-            r_after = jax.device_get(state.rounds)
-            done = jax.device_get(state.done)
-            stats.chunks += 1
-            stats.device_sweeps += int(state.chunk_iters) * inner * len(live)
-            stats.useful_sweeps += int(sum(
-                int(r_after[j] - r_before[j])
-                for j in range(len(live)) if live[j] is not None))
-            return state, r_after, done
-
-        keyed: dict = {}
-        for i, p in enumerate(pgms):
-            keyed.setdefault(bucket_key(p, growth), []).append(i)
-
-        for key in sorted(keyed):
-            idx = keyed[key]
-            e_b, v_b, s_b, re_b, rv_b = group_ceilings([pgms[i] for i in idx])
-            width = min(max_batch or len(idx), len(idx))
-
-            def make_batch(indices) -> BatchedPGM:
-                return BatchedPGM.from_pgms(
-                    [pgms[i] for i in indices], n_edges=e_b, n_vertices=v_b,
-                    n_states=s_b, n_real_edges=re_b, n_real_vertices=rv_b)
-
-            if not evacuate:
-                # Baseline: same group-ceiling padding, same chunk cadence,
-                # but each width-sized bucket runs to completion -- the only
-                # difference vs. the path below is the missing backfill.
-                for lo in range(0, len(idx), width):
-                    sub = idx[lo:lo + width]
-                    state = self.init(make_batch(sub), jnp.stack(
-                        [jax.random.fold_in(rng, i) for i in sub]))
-                    live = list(sub)
-                    while not self.finished(state):
-                        state, _, _ = run_chunks(state, live)
-                    for j, gi in enumerate(sub):
-                        results[gi] = self._slice_result(state, j)
-                        stats.evacuated += 1
-                        stats.evacuation_log.append((stats.chunks, gi))
-                continue
-
-            queue = deque(idx)
-            live: List[int | None] = [queue.popleft() for _ in range(width)]
-            state = self.init(make_batch(live), jnp.stack(
-                [jax.random.fold_in(rng, i) for i in live]))
-
-            while any(j is not None for j in live):
-                state, r_after, done = run_chunks(state, live)
-                for j in range(width):
-                    gi = live[j]
-                    if gi is None:
-                        continue
-                    if done[j] or r_after[j] >= cfg.max_rounds:
-                        results[gi] = self._slice_result(state, j)
-                        stats.evacuated += 1
-                        stats.evacuation_log.append((stats.chunks, gi))
-                        live[j] = None
-                        if queue:
-                            nxt = queue.popleft()
-                            elem = pad_pgm(
-                                pgms[nxt], n_edges=e_b, n_vertices=v_b,
-                                n_states=s_b, n_real_edges=re_b,
-                                n_real_vertices=rv_b)
-                            state = _load_slot(
-                                state, jnp.int32(j), elem,
-                                jax.random.fold_in(rng, nxt),
-                                scheduler=self.scheduler)
-                            live[j] = nxt
-                            stats.backfilled += 1
-        return ServeResult(results, stats)  # type: ignore[arg-type]
+        from repro.core.serving import serve_async
+        rep = serve_async(self, list(stream), rng, growth=growth,
+                          max_batch=max_batch, chunk_rounds=chunk_rounds,
+                          evacuate=evacuate, compact=False, slots=1,
+                          prefetch=None)
+        return ServeResult(rep.results, rep.stats)

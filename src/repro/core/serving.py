@@ -1,0 +1,517 @@
+"""Asynchronous BP serving: online request streams, double-buffered bucket
+slots, prefetch staging, and bucket compaction.
+
+``BPEngine.serve`` (repro.core.engine) made the engine a scheduler one level
+up: it decides which graphs occupy device slots each chunk. But the legacy
+driver materializes the whole request list, steps one resident bucket at a
+time, and keeps a bucket at its admission width until its group finishes --
+once the pending queue drains, evacuated slots are dead weight every
+remaining chunk still pays for. This module rebuilds that loop as a
+pipeline:
+
+- **online streams**: requests arrive from any iterator; nothing needs the
+  full workload up front. Arrivals are *staged* -- padded host-side (numpy,
+  no XLA warm-up) and moved early with ``jax.device_put`` -- so admission
+  and backfill never wait on host prep or H2D transfer.
+- **double-buffered slots**: up to ``slots`` resident buckets are stepped
+  per cycle. Every slot dispatches first (JAX async dispatch returns
+  before the chunk finishes), then the host pulls and stages new arrivals
+  *while the device crunches*, and only then does each slot sync and get
+  serviced (evacuation, backfill, compaction). Host bucketing no longer
+  idles the device, and a straggling bucket no longer idles the host.
+- **bucket compaction**: when a group's queue has drained and the stream is
+  exhausted, survivors re-bucket into a narrower batch (power-of-two
+  widths, so at most log2(width) recompiles per shape family), removing
+  the dead-slot sweeps that evacuation alone cannot -- a slot with no
+  pending work to backfill still costs one device sweep per loop iteration
+  at the old width.
+
+Trajectory invariance is the load-bearing property: a graph's trajectory
+depends only on its own padded shape and RNG key (the batched loop body is
+per-graph gated, and the update runs on a disjoint union), so neither the
+slot count, nor backfill order, nor compaction changes any result bit. On a
+materialized ``Sequence`` the pipeline reuses ``serve``'s group-ceiling
+padding, making ``serve_async`` bitwise-identical to the legacy driver --
+which is now itself a thin wrapper over this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, Iterable, Iterator, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batch import (BatchedPGM, _pow2_ceil, bucket_key,
+                              bucket_shape, group_ceilings)
+from repro.core.engine import (BPEngine, BPResult, BPState, ServeStats,
+                               _load_slot)
+from repro.core.graph import PGM, pad_pgm_arrays
+
+__all__ = ["AsyncServeResult", "AsyncServeStats", "RequestRecord",
+           "ServingPipeline", "serve_async"]
+
+
+# --------------------------------------------------------------- records --
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One served request: its ``BPResult`` plus the host-side timeline.
+
+    ``t_enqueue`` is when the request was pulled from the stream (queue-in),
+    ``t_admit`` when it was loaded into a resident bucket slot, ``t_done``
+    when its result was released after a chunk sync (``perf_counter``
+    seconds; the result's arrays may still be materializing -- release is
+    dispatch, not blocking). ``latency_s`` is the serving metric: queue-in
+    to result release."""
+
+    rid: int                    # input position (also the RNG fold_in index)
+    result: BPResult
+    t_enqueue: float
+    t_admit: float
+    t_done: float
+
+    @property
+    def latency_s(self) -> float:
+        """Queue-in -> result-release latency, seconds."""
+        return self.t_done - self.t_enqueue
+
+    @property
+    def queue_s(self) -> float:
+        """Time spent waiting for a bucket slot, seconds."""
+        return self.t_admit - self.t_enqueue
+
+    @property
+    def service_s(self) -> float:
+        """Time resident in a bucket slot, seconds."""
+        return self.t_done - self.t_admit
+
+
+@dataclasses.dataclass
+class AsyncServeStats(ServeStats):
+    """``ServeStats`` plus the async pipeline's own accounting.
+
+    ``compactions`` counts re-bucketing events (``compaction_log`` records
+    ``(chunk index, width before, width after)`` for each);
+    ``buckets_opened`` counts slot admissions (fresh resident batches, i.e.
+    compile-relevant shapes seen), and ``staged`` counts requests pulled
+    from the stream and prefetched to the device."""
+
+    compactions: int = 0
+    #: (chunk index, width before, width after) per compaction event
+    compaction_log: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)
+    buckets_opened: int = 0
+    staged: int = 0
+
+
+@dataclasses.dataclass
+class AsyncServeResult:
+    """``serve_async`` output: per-request records in *completion* order
+    plus pipeline stats. ``results`` re-sorts to input (rid) order, matching
+    the legacy ``ServeResult.results`` contract."""
+
+    records: List[RequestRecord]    # completion order
+    stats: AsyncServeStats
+
+    @property
+    def results(self) -> List[BPResult]:
+        """Per-request ``BPResult`` list indexed by rid. For the usual
+        dense 0..n-1 rids this is input order; streams that supplied sparse
+        explicit rids leave ``None`` gaps at the unused positions (rejected
+        beyond a small sparsity factor -- use ``.records`` there)."""
+        n = 1 + max((rec.rid for rec in self.records), default=-1)
+        if n > 4 * len(self.records) + 64:
+            raise ValueError(
+                f"rids too sparse for a dense results list (max rid {n - 1} "
+                f"over {len(self.records)} records); use .records instead")
+        out: List[BPResult | None] = [None] * n
+        for rec in self.records:
+            out[rec.rid] = rec.result
+        return out  # type: ignore[return-value]
+
+    def latency_percentiles(
+            self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+        """Queue-to-result latency percentiles in ms, ``{"p50": ...}``
+        (NaN entries when no requests were served)."""
+        if not self.records:
+            return {f"p{q:g}": float("nan") for q in qs}
+        lat = np.array([r.latency_s for r in self.records]) * 1e3
+        return {f"p{q:g}": float(np.percentile(lat, q)) for q in qs}
+
+
+# ------------------------------------------------------------- internals --
+
+@dataclasses.dataclass
+class _Staged:
+    """A request staged for admission: padded to its group's ceilings and
+    already ``device_put`` (the prefetch)."""
+    rid: int
+    elem: PGM
+    key: jax.Array
+    t_enqueue: float
+
+
+class _Group:
+    """One shape family: fixed padded-shape ceilings + its pending queue."""
+
+    __slots__ = ("ceilings", "queue")
+
+    def __init__(self, ceilings: Tuple[int, int, int, int, int]):
+        self.ceilings = ceilings
+        self.queue: Deque[_Staged] = deque()
+
+
+@dataclasses.dataclass(eq=False)     # remove-by-identity from the slot list
+class _Slot:
+    """One resident bucket: its group, engine state, and host-side caches
+    (live rid per batch slot, last-synced per-graph rounds, admit times)."""
+    group: _Group
+    state: BPState
+    live: List[int | None]
+    rounds_host: np.ndarray
+    r_before: np.ndarray
+    meta: Dict[int, Tuple[float, float]]    # rid -> (t_enqueue, t_admit)
+
+    @property
+    def width(self) -> int:
+        return len(self.live)
+
+
+def _narrow_state(state: BPState, idx: Sequence[int]) -> BPState:
+    """Gather batch slots ``idx`` out of a batched ``BPState`` (the
+    compaction primitive): every per-graph leaf -- graph arrays, messages,
+    scheduler carry, RNG keys, counters -- is sliced along the batch axis,
+    so each kept graph's trajectory continues bit-for-bit in the narrower
+    batch."""
+    ia = jnp.asarray(list(idx), dtype=jnp.int32)
+    take = lambda x: x[ia]                                    # noqa: E731
+    return dataclasses.replace(
+        state,
+        graph=state.graph.take(ia),
+        logm=take(state.logm),
+        sched_state=jax.tree.map(take, state.sched_state),
+        rng=state.rng[ia],
+        rounds=take(state.rounds),
+        done=take(state.done),
+        updates=take(state.updates),
+        unconverged_history=take(state.unconverged_history),
+        max_residual=take(state.max_residual))
+
+
+# --------------------------------------------------------------- pipeline --
+
+class ServingPipeline:
+    """The asynchronous serving driver (see module docstring).
+
+    One pipeline instance serves one stream through one ``BPEngine``.
+    ``serve(stream)`` is a generator yielding a ``RequestRecord`` per
+    request *in completion order* -- consume it incrementally for online
+    workloads, or use :func:`serve_async` to collect everything.
+
+    Knobs: ``slots`` bounds resident buckets stepped per cycle (2 =
+    double-buffering; 1 reproduces the legacy serve cadence exactly);
+    ``prefetch`` is the staged-request low-water mark the host keeps pulled
+    ahead of admission (``None`` = drain the stream eagerly up front);
+    ``evacuate``/``compact`` toggle the straggler policies;
+    ``record_events=False`` drops the per-request evacuation/compaction
+    logs (counters stay), bounding host memory on indefinitely long
+    streams; ``plan`` maps a ``bucket_key`` to explicit group ceilings
+    (the materialized-stream compat path) -- without it each request pads
+    to its own deterministic ``bucket_shape`` ceilings, the online policy.
+
+    The stream may yield ``PGM``s (rid = arrival order) or explicit
+    ``(rid, PGM)`` pairs. Per-request RNG keys are ``fold_in(rng, rid)``,
+    so results are independent of every pipeline knob; only the *padded
+    shape* policy (plan vs online) can alter stochastic-scheduler
+    trajectories, the caveat shared with ``run_many``. The stream is pulled
+    on the serving thread: a source that blocks in ``__next__`` delays
+    servicing, so wrap genuinely bursty sources in their own queue.
+    """
+
+    def __init__(self, engine: BPEngine, rng: jax.Array, *,
+                 growth: float = 2.0, max_batch: int | None = None,
+                 chunk_rounds: int | None = None, evacuate: bool = True,
+                 compact: bool = True, slots: int = 2,
+                 prefetch: int | None = 8,
+                 record_events: bool = True,
+                 plan: Dict[tuple, tuple] | None = None):
+        if engine.is_serial:
+            raise NotImplementedError(
+                "serving needs a frontier scheduler (srbp is host-serial)")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_batch is not None and max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        cfg = engine.config
+        self.engine = engine
+        self.rng = rng
+        self.growth = growth
+        self.max_batch = max_batch
+        self.chunk = (chunk_rounds or cfg.chunk_rounds
+                      or max(1, cfg.max_rounds // 16))
+        self.evacuate = evacuate
+        self.compact = compact
+        self.slots = slots
+        self.prefetch = prefetch
+        self.record_events = record_events
+        self.plan = plan
+        self.stats = AsyncServeStats()
+        self._groups: Dict[tuple, _Group] = {}
+        self._exhausted = False
+        self._arrival = 0
+        # Duplicate-rid detection only applies once the stream supplies
+        # explicit (rid, PGM) pairs; auto-assigned rids are unique by
+        # construction, so the common online path stores nothing per
+        # request (long-lived streams must not grow host memory).
+        self._explicit_rids = False
+        self._seen_rids: set[int] = set()
+
+    # -- staging (host padding + device_put prefetch) ----------------------
+
+    def _group_for(self, pgm: PGM) -> _Group:
+        if self.plan is not None:
+            key = bucket_key(pgm, self.growth)
+            ceilings = self.plan[key]
+        else:
+            key = ceilings = bucket_shape(pgm, self.growth)
+        group = self._groups.get(key)
+        if group is None:
+            group = self._groups[key] = _Group(ceilings)
+        return group
+
+    def _stage(self, rid: int, pgm: PGM, t_enqueue: float) -> None:
+        if self._explicit_rids:         # rid = RNG fold_in index: must be 1:1
+            if rid in self._seen_rids:
+                raise ValueError(f"duplicate request id {rid} in stream")
+            self._seen_rids.add(rid)
+        group = self._group_for(pgm)
+        e, v, s, re_, rv = group.ceilings
+        arrs = pad_pgm_arrays(pgm, n_edges=e, n_vertices=v, n_states=s)
+        # The prefetch: H2D starts now, overlapped with device compute.
+        elem = PGM(n_real_vertices=rv, n_real_edges=re_,
+                   **jax.device_put(arrs))
+        group.queue.append(_Staged(
+            rid, elem, jax.random.fold_in(self.rng, rid), t_enqueue))
+        self.stats.staged += 1
+
+    def _pump(self, it: Iterator, target: float) -> None:
+        """Pull requests until ``target`` are staged (or the stream ends)."""
+        while (not self._exhausted
+               and sum(len(g.queue) for g in self._groups.values()) < target):
+            try:
+                item = next(it)
+            except StopIteration:
+                self._exhausted = True
+                return
+            t = time.perf_counter()
+            if isinstance(item, tuple):
+                rid, pgm = item
+                self._explicit_rids = True
+            else:
+                rid, pgm = self._arrival, item
+            self._arrival += 1
+            self._stage(int(rid), pgm, t)
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def _admit(self, group: _Group) -> _Slot:
+        """Open a resident bucket from the group's queue: width =
+        min(max_batch, pending), stacked from prefetched elements."""
+        width = min(self.max_batch or len(group.queue), len(group.queue))
+        take = [group.queue.popleft() for _ in range(width)]
+        batch = BatchedPGM(pgm=jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[s.elem for s in take]))
+        keys = jnp.stack([s.key for s in take])
+        state = self.engine.init(batch, keys)
+        t = time.perf_counter()
+        self.stats.buckets_opened += 1
+        return _Slot(group=group, state=state,
+                     live=[s.rid for s in take],
+                     rounds_host=np.zeros(width, np.int64),
+                     r_before=np.zeros(width, np.int64),
+                     meta={s.rid: (s.t_enqueue, t) for s in take})
+
+    def _release(self, slot: _Slot, j: int) -> RequestRecord:
+        rid = slot.live[j]
+        assert rid is not None
+        result = self.engine._slice_result(slot.state, j)
+        slot.live[j] = None
+        self.stats.evacuated += 1
+        if self.record_events:      # O(requests) log; off for infinite streams
+            self.stats.evacuation_log.append((self.stats.chunks, rid))
+        t_enq, t_adm = slot.meta.pop(rid)
+        return RequestRecord(rid=rid, result=result, t_enqueue=t_enq,
+                             t_admit=t_adm, t_done=time.perf_counter())
+
+    def _backfill(self, slot: _Slot, j: int) -> None:
+        staged = slot.group.queue.popleft()
+        slot.state = _load_slot(slot.state, jnp.int32(j), staged.elem,
+                                staged.key, scheduler=self.engine.scheduler)
+        slot.live[j] = staged.rid
+        slot.rounds_host[j] = 0
+        slot.meta[staged.rid] = (staged.t_enqueue, time.perf_counter())
+        self.stats.backfilled += 1
+
+    def _maybe_compact(self, slot: _Slot) -> None:
+        """Re-bucket survivors into a narrower batch once no backfill can
+        ever arrive (queue drained, stream exhausted). Pow2 target widths
+        bound recompiles at log2(width) per shape family; surplus slots are
+        filled with already-dead entries, which the gated chunk body keeps
+        inert."""
+        if not (self.compact and self.evacuate and self._exhausted
+                and not slot.group.queue):
+            return
+        keep = [j for j, rid in enumerate(slot.live) if rid is not None]
+        if not keep:
+            return
+        new_w = _pow2_ceil(len(keep))
+        if new_w >= slot.width:
+            return
+        dead = [j for j, rid in enumerate(slot.live) if rid is None]
+        chosen = sorted(keep + dead[:new_w - len(keep)])
+        self.stats.compactions += 1
+        if self.record_events:
+            self.stats.compaction_log.append(
+                (self.stats.chunks, slot.width, new_w))
+        slot.state = _narrow_state(slot.state, chosen)
+        slot.live = [slot.live[j] for j in chosen]
+        slot.rounds_host = slot.rounds_host[chosen]
+        slot.r_before = slot.r_before[chosen]
+
+    def _service(self, slot: _Slot) -> Iterable[RequestRecord]:
+        """Sync one stepped slot and apply the straggler policies: account
+        sweeps, release finished graphs, backfill freed slots from the
+        group queue, then consider compaction."""
+        state = slot.state
+        r_after = np.asarray(jax.device_get(state.rounds))   # blocks on chunk
+        done = np.asarray(jax.device_get(state.done))
+        max_rounds = self.engine.config.max_rounds
+        inner = self.engine.scheduler.inner_sweeps
+        self.stats.chunks += 1
+        self.stats.device_sweeps += int(state.chunk_iters) * inner * slot.width
+        self.stats.useful_sweeps += int(sum(
+            int(r_after[j] - slot.r_before[j])
+            for j in range(slot.width) if slot.live[j] is not None))
+        slot.rounds_host = r_after.copy()
+        if not self.evacuate:
+            # Run-to-completion baseline: release everything only when the
+            # whole bucket is finished; never backfill, never compact.
+            if all(bool(done[j]) or r_after[j] >= max_rounds
+                   for j in range(slot.width)):
+                for j in range(slot.width):
+                    yield self._release(slot, j)
+            return
+        for j in range(slot.width):
+            if slot.live[j] is None:
+                continue
+            if bool(done[j]) or r_after[j] >= max_rounds:
+                yield self._release(slot, j)
+                if slot.group.queue:
+                    self._backfill(slot, j)
+        # Slots that went dead while the queue was momentarily empty are
+        # revived by later arrivals -- without this, an online straggler
+        # bucket would burn dead-slot sweeps while new same-shape requests
+        # queue behind it.
+        for j in range(slot.width):
+            if slot.live[j] is None and slot.group.queue:
+                self._backfill(slot, j)
+        self._maybe_compact(slot)
+
+    # -- the drive loop ----------------------------------------------------
+
+    def serve(self, stream: Iterable) -> Iterator[RequestRecord]:
+        """Drive ``stream`` through the pipeline, yielding one
+        ``RequestRecord`` per request in completion order.
+
+        Each cycle: (1) admit staged groups into free slots, (2) dispatch a
+        chunk on every slot (JAX async dispatch -- non-blocking), (3) pull
+        and stage new arrivals while the device runs, (4) sync + service
+        each slot, yielding released results. Terminates when the stream is
+        exhausted and every admitted graph has been released."""
+        it = iter(stream)
+        resident: List[_Slot] = []
+        if self.prefetch is None:
+            self._pump(it, float("inf"))
+        # Cross-group FIFO: admit the group whose head request has waited
+        # longest, so a minority shape family cannot starve behind a
+        # sustained majority one.
+        def oldest():
+            return min((g for g in self._groups.values() if g.queue),
+                       key=lambda g: g.queue[0].t_enqueue, default=None)
+
+        while True:
+            while len(resident) < self.slots:
+                group = oldest()
+                if group is None:
+                    self._pump(it, max(1, self.prefetch or 1))
+                    group = oldest()
+                    if group is None:
+                        break                   # stream exhausted, all staged
+                resident.append(self._admit(group))
+            if not resident:
+                return
+            for slot in resident:
+                slot.r_before = slot.rounds_host.copy()
+                slot.state = self.engine.step(slot.state,
+                                              chunk_rounds=self.chunk)
+            if self.prefetch:
+                # Host-side staging overlapped with the in-flight chunks.
+                # Dead slots whose group queue is empty raise the pull
+                # target: staged work from *other* groups must not stop us
+                # from fetching requests that could revive them.
+                hunger = sum(1 for slot in resident for rid in slot.live
+                             if rid is None and not slot.group.queue)
+                self._pump(it, self.prefetch + hunger)
+            for slot in list(resident):
+                yield from self._service(slot)
+                if all(rid is None for rid in slot.live):
+                    resident.remove(slot)
+
+
+def _materialized_plan(pgms: Sequence[PGM], growth: float):
+    """Legacy-compatible plan for a fully materialized stream: group by
+    ``bucket_key``, pad every member to its *group's* joint ceilings, and
+    feed requests in sorted-key order -- exactly the legacy ``serve``
+    policy, so trajectories (and with ``slots=1``, even sweep accounting)
+    coincide."""
+    keyed: Dict[tuple, List[int]] = {}
+    for i, p in enumerate(pgms):
+        keyed.setdefault(bucket_key(p, growth), []).append(i)
+    plan, ordered = {}, []
+    for key in sorted(keyed):
+        idx = keyed[key]
+        plan[key] = group_ceilings([pgms[i] for i in idx])
+        ordered.extend((i, pgms[i]) for i in idx)
+    return plan, ordered
+
+
+def serve_async(engine: BPEngine, stream, rng: jax.Array, *,
+                growth: float = 2.0, max_batch: int | None = None,
+                chunk_rounds: int | None = None, evacuate: bool = True,
+                compact: bool = True, slots: int = 2,
+                prefetch: int | None = 8,
+                record_events: bool = True) -> AsyncServeResult:
+    """Serve a request stream through the asynchronous pipeline.
+
+    ``stream`` is either a materialized ``Sequence[PGM]`` -- padded with the
+    legacy group-ceiling plan, so per-request results are *bitwise
+    identical* to ``BPEngine.serve`` on the same inputs -- or any iterator
+    of PGMs (the online path: each request pads to its deterministic
+    ``bucket_shape`` ceilings the moment it arrives, no global knowledge
+    needed). See :class:`ServingPipeline` for the knobs; this wrapper just
+    collects the generator into an :class:`AsyncServeResult` (records in
+    completion order, ``.results`` in input order)."""
+    plan = None
+    if isinstance(stream, Sequence):
+        plan, stream = _materialized_plan(list(stream), growth)
+    pipe = ServingPipeline(engine, rng, growth=growth, max_batch=max_batch,
+                           chunk_rounds=chunk_rounds, evacuate=evacuate,
+                           compact=compact, slots=slots, prefetch=prefetch,
+                           record_events=record_events, plan=plan)
+    records = list(pipe.serve(stream))
+    return AsyncServeResult(records=records, stats=pipe.stats)

@@ -1,8 +1,10 @@
 """Documentation contract: the public API is documented and the docs are
 true. Docstring checks cover every symbol exported from ``repro.core``,
-``repro.core.engine`` and ``repro.dist``; the code blocks in
-``docs/engine.md`` are executed verbatim (they are the engine's living
-spec); relative links between the markdown files must resolve."""
+``repro.core.engine``, ``repro.core.serving``, ``repro.core.batch`` and
+``repro.dist``; the code blocks in ``docs/engine.md`` and
+``docs/serving.md`` are executed verbatim (they are the living spec of the
+engine and the serving pipeline); relative links between the markdown files
+must resolve, and README's doc table must link every file in ``docs/``."""
 
 import inspect
 import pathlib
@@ -13,7 +15,8 @@ import pytest
 DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs"
 REPO = DOCS.parent
 
-PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.dist"]
+PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.core.serving",
+                  "repro.core.batch", "repro.dist"]
 
 
 def _public_objects(modname):
@@ -42,20 +45,22 @@ def _code_blocks(md_path):
     return re.findall(r"```python\n(.*?)```", text, flags=re.DOTALL)
 
 
-def test_engine_md_code_blocks_execute():
-    blocks = _code_blocks(DOCS / "engine.md")
-    assert len(blocks) >= 3, "engine.md lost its executable examples"
+@pytest.mark.parametrize("md,min_blocks", [("engine.md", 3),
+                                           ("serving.md", 3)])
+def test_md_code_blocks_execute(md, min_blocks):
+    blocks = _code_blocks(DOCS / md)
+    assert len(blocks) >= min_blocks, f"{md} lost its executable examples"
     ns = {}
     for i, block in enumerate(blocks):
         try:
-            exec(compile(block, f"docs/engine.md[block {i}]", "exec"), ns)
+            exec(compile(block, f"docs/{md}[block {i}]", "exec"), ns)
         except Exception as e:     # pragma: no cover - failure reporting
-            pytest.fail(f"docs/engine.md block {i} failed: {e!r}\n{block}")
+            pytest.fail(f"docs/{md} block {i} failed: {e!r}\n{block}")
 
 
 @pytest.mark.parametrize("md", ["README.md", "docs/architecture.md",
                                 "docs/schedulers.md", "docs/engine.md",
-                                "docs/sharding.md"])
+                                "docs/sharding.md", "docs/serving.md"])
 def test_relative_links_resolve(md):
     path = REPO / md
     broken = []
@@ -68,3 +73,13 @@ def test_relative_links_resolve(md):
         if not resolved.exists():
             broken.append(target)
     assert not broken, f"{md}: broken relative links: {broken}"
+
+
+def test_readme_links_every_doc():
+    """README's doc-links table is the docs' front door: every markdown
+    file under docs/ must be linked from it (CI's docs job enforces the
+    same for serving.md via grep)."""
+    readme = (REPO / "README.md").read_text()
+    missing = [f"docs/{p.name}" for p in sorted(DOCS.glob("*.md"))
+               if f"docs/{p.name}" not in readme]
+    assert not missing, f"README.md does not link: {missing}"

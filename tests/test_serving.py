@@ -1,0 +1,219 @@
+"""Async serving pipeline (repro.core.serving): bitwise parity with the
+legacy driver, bucket compaction's wasted-sweep reduction, and the online
+request-iterator path.
+
+The load-bearing invariant under test: a graph's trajectory depends only on
+its own padded shape and RNG key, so slot count, prefetch, backfill order,
+and compaction may change *scheduling* (sweep accounting, completion order)
+but never a result bit.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BPConfig, BPEngine, BatchedPGM, ServingPipeline,
+                        serve_async)
+from repro.core.batch import bucket_shape
+from repro.pgm import chain_graph, ising_grid
+
+
+def _straggler_stream():
+    # LBP deterministic: C=1.5 converges in tens of rounds while
+    # ising(8, 3.5, seed=0) stalls to max_rounds. Same shape -> one group.
+    fast = [ising_grid(8, 1.5, seed=s) for s in range(8)]
+    return fast[:4] + [ising_grid(8, 3.5, seed=0)] + fast[4:], 4
+
+
+def _lbp_engine(max_rounds=320):
+    return BPEngine(BPConfig(scheduler="lbp", eps=1e-5,
+                             max_rounds=max_rounds, history=False))
+
+
+def _assert_bitwise(got, want):
+    assert int(got.rounds) == int(want.rounds)
+    assert int(got.updates) == int(want.updates)
+    np.testing.assert_array_equal(np.asarray(got.logm), np.asarray(want.logm))
+
+
+class TestServeAsyncParity:
+    """Acceptance: serve_async on a materialized stream is bitwise-identical
+    to legacy serve (and to run_many where padded shapes coincide)."""
+
+    def test_bitwise_matches_serve_mixed_shapes_rnbp(self):
+        stream = [ising_grid(6, 2.0, seed=1), chain_graph(40, seed=2),
+                  ising_grid(7, 2.0, seed=3), chain_graph(50, seed=4),
+                  chain_graph(45, seed=5), ising_grid(6, 2.2, seed=6),
+                  chain_graph(60, seed=7)]
+        engine = BPEngine(BPConfig(scheduler="rnbp",
+                                   scheduler_kwargs={"low_p": 0.4},
+                                   eps=1e-4, max_rounds=400, history=False))
+        kw = dict(max_batch=2, chunk_rounds=32)
+        legacy = engine.serve(stream, jax.random.key(0), **kw)
+        rep = serve_async(engine, stream, jax.random.key(0),
+                          compact=True, slots=2, **kw)
+        assert len(rep.results) == len(stream)
+        for got, want in zip(rep.results, legacy.results):
+            _assert_bitwise(got, want)
+        # scheduling may differ; the work accounted as useful may not
+        assert rep.stats.useful_sweeps == legacy.stats.useful_sweeps
+
+    def test_bitwise_matches_run_many_same_shape(self):
+        stream, _ = _straggler_stream()
+        engine = BPEngine(BPConfig(scheduler="rnbp",
+                                   scheduler_kwargs={"low_p": 0.4},
+                                   eps=1e-4, max_rounds=320, history=False))
+        rep = serve_async(engine, stream, jax.random.key(3), max_batch=3,
+                          chunk_rounds=48, compact=True, slots=2)
+        ref = engine.run_many(stream, jax.random.key(3), max_batch=3)
+        for got, want in zip(rep.results, ref):
+            _assert_bitwise(got, want)
+
+    def test_serial_scheduler_rejected(self):
+        engine = BPEngine(BPConfig(scheduler="srbp"))
+        with pytest.raises(NotImplementedError):
+            ServingPipeline(engine, jax.random.key(0))
+
+
+class TestCompaction:
+    """Satellite: once the pending queue drains, survivors re-bucket into a
+    narrower batch, so dead slots stop costing sweeps -- the term evacuation
+    alone cannot remove."""
+
+    def test_post_drain_rebucket_reduces_wasted_sweeps(self):
+        stream, slow_i = _straggler_stream()
+        engine = _lbp_engine()
+        kw = dict(max_batch=3, chunk_rounds=64, slots=1)
+        evac = serve_async(engine, stream, jax.random.key(0),
+                           compact=False, **kw)
+        comp = serve_async(engine, stream, jax.random.key(0),
+                           compact=True, **kw)
+        # same graphs do the same useful work; compaction only sheds waste
+        assert comp.stats.useful_sweeps == evac.stats.useful_sweeps
+        assert comp.stats.compactions >= 1
+        assert comp.stats.wasted_sweeps < evac.stats.wasted_sweeps
+        assert comp.stats.device_sweeps < evac.stats.device_sweeps
+        # the straggler survives compaction with its trajectory intact
+        for got, want in zip(comp.results, evac.results):
+            _assert_bitwise(got, want)
+        assert not bool(comp.results[slow_i].converged)
+        # widths in the log shrink monotonically and stay pow2
+        for _, before, after in comp.stats.compaction_log:
+            assert after < before
+            assert after & (after - 1) == 0
+
+    def test_batched_pgm_take_preserves_graphs(self):
+        pgms = [ising_grid(6, 2.0, seed=s) for s in range(4)]
+        batch = BatchedPGM.from_pgms(pgms)
+        sub = batch.take([0, 2])
+        assert sub.size == 2
+        for want, j in [(0, 0), (2, 1)]:
+            got, ref = sub.graph(j), batch.graph(want)
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestOnlineStream:
+    """The pipeline accepts a lazy iterator: requests are staged as pulled,
+    padded to per-request ``bucket_shape`` ceilings, and each reproduces its
+    solo trajectory (LBP is padding-invariant on real edges)."""
+
+    def test_online_iterator_matches_solo_runs(self):
+        stream, _ = _straggler_stream()
+        engine = _lbp_engine()
+        rep = serve_async(engine, iter(stream), jax.random.key(0),
+                          max_batch=3, chunk_rounds=64, prefetch=4, slots=2)
+        assert len(rep.records) == len(stream)
+        assert sorted(r.rid for r in rep.records) == list(range(len(stream)))
+        for rec in rep.records:
+            want = engine.run(stream[rec.rid],
+                              jax.random.fold_in(jax.random.key(0), rec.rid))
+            got = rec.result
+            assert int(got.rounds) == int(want.rounds)
+            rv = stream[rec.rid].n_real_vertices
+            s0 = want.beliefs.shape[1]
+            np.testing.assert_allclose(
+                np.asarray(got.beliefs)[:rv, :s0],
+                np.asarray(want.beliefs)[:rv], atol=1e-6)
+
+    def test_latency_timeline_and_percentiles(self):
+        stream, _ = _straggler_stream()
+        engine = _lbp_engine(max_rounds=128)
+        rep = serve_async(engine, iter(stream), jax.random.key(0),
+                          max_batch=4, chunk_rounds=32)
+        for rec in rep.records:
+            assert rec.t_done >= rec.t_admit >= rec.t_enqueue
+            assert rec.latency_s == pytest.approx(
+                rec.queue_s + rec.service_s)
+        pct = rep.latency_percentiles((50, 99))
+        assert pct["p50"] <= pct["p99"]
+        assert rep.stats.staged == len(stream)
+
+    def test_lazy_pull_bounded_by_prefetch(self):
+        """With prefetch=k the host never pulls the whole stream up front:
+        the pull position stays within k of staged-but-unserved work."""
+        stream, _ = _straggler_stream()
+        pulled = []
+
+        def gen():
+            for i, p in enumerate(stream):
+                pulled.append(i)
+                yield p
+
+        engine = _lbp_engine(max_rounds=128)
+        pipe = ServingPipeline(engine, jax.random.key(0), max_batch=2,
+                               chunk_rounds=32, prefetch=2)
+        seen = 0
+        for _ in pipe.serve(gen()):
+            seen += 1
+            # at most (resident slots * width) + prefetch ahead of releases
+            assert len(pulled) <= seen + 2 * 2 + 2
+        assert seen == len(stream)
+
+    def test_dead_slots_revived_by_later_arrivals(self):
+        """A slot that empties while its group queue is momentarily dry
+        must be backfilled once same-shape requests arrive -- and staged
+        work from *other* groups must not block pulling them (hunger-aware
+        prefetch). Without both, the late ising graphs would wait out the
+        straggler's entire run on a dead slot."""
+        straggler = ising_grid(8, 3.5, seed=0)
+        fast = [ising_grid(8, 1.5, seed=s) for s in range(4)]
+        chains = [chain_graph(40, seed=1), chain_graph(40, seed=2)]
+        stream = [straggler, fast[0]] + chains + fast[1:]
+        engine = _lbp_engine(max_rounds=384)
+        rep = serve_async(engine, iter(stream), jax.random.key(0),
+                          max_batch=2, chunk_rounds=48, slots=1, prefetch=2)
+        assert len(rep.records) == len(stream)
+        assert rep.stats.backfilled > 0
+        # the late fast graphs ride the straggler's bucket, so they finish
+        # before the straggler exhausts max_rounds
+        order = [r.rid for r in rep.records]
+        assert order.index(0) > max(order.index(i) for i in (4, 5))
+
+    def test_explicit_sparse_rids_and_empty_stream(self):
+        """(rid, PGM) streams may use sparse rids (results leaves None
+        gaps), duplicate rids are rejected (the rid is the RNG fold_in
+        index), and an empty stream serves cleanly."""
+        engine = _lbp_engine(max_rounds=128)
+        rep = serve_async(engine, iter([(5, ising_grid(6, 1.5, seed=0))]),
+                          jax.random.key(0))
+        assert len(rep.results) == 6
+        assert rep.results[5] is not None
+        assert all(r is None for r in rep.results[:5])
+        with pytest.raises(ValueError, match="duplicate"):
+            serve_async(engine, iter([(3, ising_grid(6, 1.5, seed=0)),
+                                      (3, ising_grid(6, 1.5, seed=1))]),
+                        jax.random.key(0))
+        empty = serve_async(engine, iter([]), jax.random.key(0))
+        assert empty.records == [] and empty.results == []
+        assert np.isnan(empty.latency_percentiles()["p50"])
+
+    def test_bucket_shape_is_deterministic_and_padable(self):
+        for p in [ising_grid(6, 2.0, seed=0), chain_graph(33, seed=1)]:
+            e, v, s, re_, rv = bucket_shape(p)
+            assert e >= p.n_edges and v >= p.n_vertices
+            assert s >= p.n_states_max
+            assert re_ >= p.n_real_edges and rv >= p.n_real_vertices
+            assert bucket_shape(p) == (e, v, s, re_, rv)
+        with pytest.raises(ValueError):
+            bucket_shape(ising_grid(4, 2.0, seed=0), growth=float("inf"))

@@ -25,6 +25,14 @@ BENCH_batch.json`` so the perf trajectory accumulates in CI artifacts):
   narrower batches, so its wasted sweeps must drop further. The pipeline's
   per-request records also give queue-to-result latency percentiles -- the
   serving-facing metric the aggregate numbers hide.
+- **admission policies**: a mixed-effort straggler stream (every 4th
+  request stalls toward max_rounds) served FIFO vs ``residual`` admission
+  at equal slots -- co-batching by expected effort must not increase (and
+  should roughly halve) wasted sweeps at identical useful work -- plus a
+  bursty-arrival run comparing FIFO against ``windowed`` admission
+  (fuller buckets bought with admission wait, reported separately from
+  device time) with the threaded ingestion feeder pulling the bursty
+  source.
 """
 
 from __future__ import annotations
@@ -35,6 +43,7 @@ import platform
 import time
 
 import jax
+import numpy as np
 
 from repro.core import BPConfig, BPEngine, RnBP, serve_async
 from repro.pgm import ising_grid
@@ -114,6 +123,73 @@ def _async_serving_section(record: dict) -> None:
     }
 
 
+def _admission_section(record: dict) -> None:
+    # Mixed-effort, one shape family: every 4th request stalls toward
+    # max_rounds. FIFO admission mixes effort classes, so every chunk pays
+    # dead iterations on slots whose graphs finished mid-chunk; residual
+    # admission co-batches similar-effort requests. Equal slots, equal
+    # useful work -- only the waste moves.
+    fast = [ising_grid(10, 1.5, seed=s) for s in range(16)]
+    slow = [ising_grid(10, 3.5, seed=s) for s in range(4)]
+    stream, fi, si = [], 0, 0
+    for i in range(20):
+        if i % 5 == 3:
+            stream.append(slow[si]); si += 1
+        else:
+            stream.append(fast[fi]); fi += 1
+    engine = BPEngine(BPConfig(scheduler="lbp", eps=1e-5, max_rounds=384,
+                               history=False))
+    kw = dict(max_batch=4, chunk_rounds=48, slots=1, compact=False,
+              prefetch=None)
+    fifo = serve_async(engine, stream, jax.random.key(0),
+                       admission="fifo", **kw)
+    resid = serve_async(engine, stream, jax.random.key(0),
+                        admission="residual", **kw)
+    assert resid.stats.useful_sweeps == fifo.stats.useful_sweeps
+    wasted_ratio = (resid.stats.wasted_sweeps
+                    / max(fifo.stats.wasted_sweeps, 1))
+    emit("batch/admission/fifo", fifo.stats.device_sweeps,
+         f"wasted={fifo.stats.wasted_sweeps}")
+    emit("batch/admission/residual", resid.stats.device_sweeps,
+         f"wasted={resid.stats.wasted_sweeps};"
+         f"wasted_ratio={wasted_ratio:.3f}")
+
+    # Bursty arrivals through the threaded feeder: windowed admission
+    # gathers fuller buckets (admission_widths) at the price of admission
+    # wait, which the percentile split reports separately from device time.
+    def bursty():
+        for i, p in enumerate(fast[:12]):
+            if i % 4 == 0 and i:
+                time.sleep(0.004)
+            yield p
+
+    bkw = dict(max_batch=4, chunk_rounds=48, slots=1, prefetch=2,
+               ingest_threads=2)
+    fifo_b = serve_async(engine, bursty(), jax.random.key(0), **bkw)
+    wind_b = serve_async(engine, bursty(), jax.random.key(0),
+                         admission="windowed",
+                         admission_kwargs={"window_s": 0.05}, **bkw)
+    f_wait = fifo_b.latency_percentiles((50,), field="admission")["p50"]
+    w_wait = wind_b.latency_percentiles((50,), field="admission")["p50"]
+    emit("batch/admission/windowed_widths",
+         float(np.mean(wind_b.stats.admission_widths)),
+         f"fifo_mean_width={np.mean(fifo_b.stats.admission_widths):.2f};"
+         f"wait_p50_ms={w_wait:.1f};fifo_wait_p50_ms={f_wait:.1f}")
+    record["admission_policies"] = {
+        "fifo_device_sweeps": fifo.stats.device_sweeps,
+        "fifo_wasted_sweeps": fifo.stats.wasted_sweeps,
+        "residual_device_sweeps": resid.stats.device_sweeps,
+        "residual_wasted_sweeps": resid.stats.wasted_sweeps,
+        "useful_sweeps": resid.stats.useful_sweeps,
+        "wasted_sweep_ratio": wasted_ratio,
+        "bursty_fifo_widths": fifo_b.stats.admission_widths,
+        "bursty_windowed_widths": wind_b.stats.admission_widths,
+        "bursty_windowed_holds": wind_b.stats.admission_holds,
+        "bursty_fifo_admission_wait_p50_ms": f_wait,
+        "bursty_windowed_admission_wait_p50_ms": w_wait,
+    }
+
+
 def run(full: bool = False, n_graphs: int = 0) -> None:
     n = n_graphs or (32 if full else 16)
     pgms = mixed_graph_set(n)
@@ -157,6 +233,7 @@ def run(full: bool = False, n_graphs: int = 0) -> None:
 
     _straggler_section(record)
     _async_serving_section(record)
+    _admission_section(record)
 
     with open(out_path("BENCH_batch.json"), "w") as f:
         json.dump(record, f, indent=2)

@@ -17,16 +17,23 @@ double-buffered bucket slots, and once the queue drains the survivors are
 *compacted* into narrower buckets so dead slots stop costing sweeps.
 
 Knobs:
-  --async         online iterator + double-buffered slots + compaction
-  --growth        bucketing policy: 2.0 bounds padding waste for steady
-                  traffic over few shape families, ``inf`` collapses a
-                  shape-diverse cold stream into a single compilation
-                  (sync mode only; online needs per-request shapes)
-  --max-batch     resident bucket width (slots that evacuation recycles)
-  --chunk-rounds  rounds per device chunk between evacuation sweeps
-  --no-evacuate   PR-1 baseline: run every bucket to completion
+  --async          online iterator + double-buffered slots + compaction
+  --growth         bucketing policy: 2.0 bounds padding waste for steady
+                   traffic over few shape families, ``inf`` collapses a
+                   shape-diverse cold stream into a single compilation
+                   (sync mode only; online needs per-request shapes)
+  --max-batch      resident bucket width (slots that evacuation recycles)
+  --chunk-rounds   rounds per device chunk between evacuation sweeps
+  --no-evacuate    PR-1 baseline: run every bucket to completion
+  --policy         admission policy: fifo (default) | residual (co-batch
+                   by expected effort) | windowed (delay for fullness)
+  --window-ms      windowed policy's admission window
+  --ingest-threads feeder threads pulling the stream behind a bounded
+                   queue (0 = pull on the serving thread)
 
 Run:  PYTHONPATH=src python examples/bp_serving.py [--async] [--requests 12]
+      PYTHONPATH=src python examples/bp_serving.py --async \
+          --policy residual --ingest-threads 2
 """
 
 import argparse
@@ -66,6 +73,14 @@ def main():
                     help="rounds per chunk between evacuation sweeps")
     ap.add_argument("--no-evacuate", action="store_true",
                     help="baseline: run each bucket to completion")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "residual", "windowed"],
+                    help="admission policy (docs/admission.md)")
+    ap.add_argument("--window-ms", type=float, default=10.0,
+                    help="windowed policy: admission window in ms")
+    ap.add_argument("--ingest-threads", type=int, default=0,
+                    help="feeder threads pulling the request stream "
+                         "(0 = pull on the serving thread)")
     args = ap.parse_args()
 
     engine = BPEngine(BPConfig(
@@ -75,8 +90,12 @@ def main():
 
     t_all = time.perf_counter()
     kinds = {}
+    admission_kwargs = ({"window_s": args.window_ms / 1e3}
+                        if args.policy == "windowed" else {})
     kw = dict(max_batch=args.max_batch, chunk_rounds=args.chunk_rounds,
-              evacuate=not args.no_evacuate)
+              evacuate=not args.no_evacuate, admission=args.policy,
+              admission_kwargs=admission_kwargs,
+              ingest_threads=args.ingest_threads)
 
     if args.async_mode:
         # Online path: the generator is consumed lazily; each request is
@@ -87,7 +106,8 @@ def main():
                 kinds[rid] = kind
                 yield pgm
         print(f"{args.requests} requests (async pipeline, "
-              f"width={args.max_batch})", flush=True)
+              f"width={args.max_batch}, policy={args.policy}, "
+              f"ingest_threads={args.ingest_threads})", flush=True)
         rep = serve_async(engine, online(), jax.random.key(0),
                           growth=args.growth, slots=2,
                           prefetch=2 * args.max_batch, **kw)
@@ -122,13 +142,23 @@ def main():
     s = rep.stats
     wall = time.perf_counter() - t_all
     pct = rep.latency_percentiles((50, 95, 99))
+    # Admission wait and device residency report separately: the wait is
+    # what the admission policy trades (windowed raises it for fuller
+    # buckets), the service time is what the device actually cost.
+    adm = rep.latency_percentiles((50, 95, 99), field="admission")
+    svc = rep.latency_percentiles((50, 95, 99), field="service")
     print(f"\nserved {done}/{args.requests} converged "
           f"({failed} unconverged) in {wall:.1f}s "
-          f"({args.requests / wall:.1f} graphs/s)")
-    print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+          f"({args.requests / wall:.1f} graphs/s, policy={s.policy})")
+    print(f"latency ms:        p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
           f"p99={pct['p99']:.1f}")
+    print(f"admission-wait ms: p50={adm['p50']:.1f} p95={adm['p95']:.1f} "
+          f"p99={adm['p99']:.1f}")
+    print(f"service ms:        p50={svc['p50']:.1f} p95={svc['p95']:.1f} "
+          f"p99={svc['p99']:.1f}")
     print(f"chunks={s.chunks} evacuated={s.evacuated} "
           f"backfilled={s.backfilled} compactions={s.compactions} "
+          f"admission_holds={s.admission_holds} "
           f"sweeps: device={s.device_sweeps} "
           f"useful={s.useful_sweeps} wasted={s.wasted_sweeps}")
 

@@ -9,8 +9,11 @@ Public API (the unified engine):
   ServeResult/ServeStats   serving output + sweep accounting
   serve_async        asynchronous serving pipeline (repro.core.serving):
                      online request iterators, double-buffered bucket
-                     slots, prefetch staging, bucket compaction
+                     slots, prefetch staging, bucket compaction,
+                     pluggable admission, threaded ingestion
   ServingPipeline    the pipeline driver behind serve_async (generator API)
+  AdmissionPolicy    admission-policy base + registry (fifo/residual/
+                     windowed via get_admission_policy)
   get_scheduler      registry: "lbp"/"rbp"/"rs"/"rnbp" -> Scheduler
 
 Building blocks:
@@ -26,12 +29,16 @@ Deprecated compatibility wrappers (delegate to BPEngine, exact parity):
 from repro.core.graph import PGM, build_pgm, pad_pgm, NEG_INF
 from repro.core.engine import (BPConfig, BPEngine, BPResult, BPState,
                                ServeResult, ServeStats)
-from repro.core.serving import (AsyncServeResult, AsyncServeStats,
-                                RequestRecord, ServingPipeline, serve_async)
+from repro.core.serving import (ADMISSION_POLICIES, AdmissionPolicy,
+                                AsyncServeResult, AsyncServeStats,
+                                FIFOAdmission, RequestRecord,
+                                ResidualAdmission, ServingPipeline,
+                                WindowedAdmission, get_admission_policy,
+                                register_admission_policy, serve_async)
 from repro.core.runner import run_bp
-from repro.core.batch import (BatchedPGM, Bucket, batch_keys, bucket_key,
-                              bucket_pgms, group_ceilings, run_bp_batch,
-                              run_bp_many)
+from repro.core.batch import (BatchedPGM, Bucket, RoundsHistory, batch_keys,
+                              bucket_key, bucket_pgms, group_ceilings,
+                              run_bp_batch, run_bp_many)
 from repro.core.schedulers import (LBP, RBP, RS, RnBP, SCHEDULERS,
                                    get_scheduler, register_scheduler,
                                    scheduler_spec)
@@ -46,8 +53,11 @@ __all__ = [
     "ServeResult", "ServeStats",
     "AsyncServeResult", "AsyncServeStats", "RequestRecord",
     "ServingPipeline", "serve_async",
-    "BatchedPGM", "Bucket", "batch_keys", "bucket_key", "bucket_pgms",
-    "group_ceilings",
+    "ADMISSION_POLICIES", "AdmissionPolicy", "FIFOAdmission",
+    "ResidualAdmission", "WindowedAdmission", "get_admission_policy",
+    "register_admission_policy",
+    "BatchedPGM", "Bucket", "RoundsHistory", "batch_keys", "bucket_key",
+    "bucket_pgms", "group_ceilings",
     "LBP", "RBP", "RS", "RnBP", "SCHEDULERS", "get_scheduler",
     "register_scheduler", "scheduler_spec",
     "SRBPResult", "srbp_run",

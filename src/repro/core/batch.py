@@ -24,7 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, List, Sequence, Tuple
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +34,9 @@ import numpy as np
 from repro.core.graph import EDGE_PAD, PGM, VERTEX_PAD, pad_pgm_arrays
 from repro.core.schedulers.base import Scheduler
 
-__all__ = ["BatchedPGM", "Bucket", "batch_keys", "bucket_key", "bucket_pgms",
-           "bucket_shape", "group_ceilings", "run_bp_batch", "run_bp_many"]
+__all__ = ["BatchedPGM", "Bucket", "RoundsHistory", "batch_keys",
+           "bucket_key", "bucket_pgms", "bucket_shape", "group_ceilings",
+           "run_bp_batch", "run_bp_many"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -269,6 +271,52 @@ def bucket_pgms(pgms: Sequence[PGM], *,
             batch = BatchedPGM.from_pgms([pgms[i] for i in chunk])
             buckets.append(Bucket(indices=tuple(chunk), batch=batch))
     return buckets
+
+
+class RoundsHistory:
+    """Bounded per-kind history of observed BP round counts.
+
+    A *kind* is any hashable key naming a family of similar requests -- the
+    serving layer uses the bucket-shape ceilings (``bucket_shape`` /
+    ``group_ceilings`` tuples), so graphs that share a padded shape share a
+    history. ``observe(kind, score, rounds)`` records one finished request's
+    (admission score, rounds actually run); ``expect(kind, score)`` predicts
+    the rounds a new request will need as the observed rounds of the
+    *nearest recorded score* in its kind (``None`` with no history yet).
+
+    This is the feedback half of Residual-BP-style admission
+    (``repro.core.serving.ResidualAdmission``): the cheap residual-at-admit
+    proxy orders requests, and this history calibrates that proxy into an
+    expected-effort estimate from what actually happened to similar
+    requests. ``capacity`` bounds observations kept per kind (a deque, so
+    drifting workloads age out), keeping host memory O(kinds) on
+    indefinitely long streams."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._hist: Dict[Any, Deque[Tuple[float, float]]] = {}
+
+    def observe(self, kind, score: float, rounds: float) -> None:
+        """Record one completed request of ``kind``: its admission score and
+        the rounds it actually ran before release."""
+        dq = self._hist.get(kind)
+        if dq is None:
+            dq = self._hist[kind] = deque(maxlen=self.capacity)
+        dq.append((float(score), float(rounds)))
+
+    def expect(self, kind, score: float) -> float | None:
+        """Expected rounds for a new request of ``kind`` with admission
+        ``score``: the observed rounds of the nearest recorded score, or
+        ``None`` when the kind has no history yet."""
+        dq = self._hist.get(kind)
+        if not dq:
+            return None
+        return min(dq, key=lambda sr: abs(sr[0] - float(score)))[1]
+
+    def __len__(self) -> int:
+        return sum(len(dq) for dq in self._hist.values())
 
 
 def batch_keys(rng: jax.Array, batch: BatchedPGM | int) -> jax.Array:

@@ -108,6 +108,14 @@ class BPConfig:
     ``chunk_rounds`` bounds rounds per ``step`` (None = run to
     ``max_rounds`` in one chunk); ``history`` sizes the per-round
     unconverged-count buffer (paper Figs 2/4).
+
+    ``admission`` is the *serving-side* policy knob: a registry spec string
+    ("fifo" | "windowed" | "residual", resolved through
+    ``repro.core.serving.ADMISSION_POLICIES``; ``admission_kwargs`` feed
+    the constructor) or a prebuilt ``AdmissionPolicy``. It only matters to
+    ``serve``/``serve_async``/``ServingPipeline`` -- one-shot ``run`` paths
+    ignore it -- and rides the config so a serialized deployment spec pins
+    its admission behavior alongside its scheduler.
     """
 
     scheduler: Any = "lbp"
@@ -119,10 +127,14 @@ class BPConfig:
     batch_backend: Any = None
     chunk_rounds: int | None = None
     history: bool = True
+    admission: Any = "fifo"
+    admission_kwargs: Any = ()
 
     def __post_init__(self):
         object.__setattr__(self, "scheduler_kwargs",
                            _freeze_kwargs(self.scheduler_kwargs))
+        object.__setattr__(self, "admission_kwargs",
+                           _freeze_kwargs(self.admission_kwargs))
         if not self.eps > 0:
             raise ValueError(f"eps must be > 0, got {self.eps}")
         if self.max_rounds < 1:
@@ -147,7 +159,11 @@ class BPConfig:
         for f in ("backend", "batch_backend"):
             if d[f] is not None and not isinstance(d[f], str):
                 raise ValueError(f"{f} is a callable; not serializable")
+        if not isinstance(d["admission"], str):
+            raise ValueError("admission is a policy instance; use a registry "
+                             "spec string for a serializable config")
         d["scheduler_kwargs"] = dict(d["scheduler_kwargs"])
+        d["admission_kwargs"] = dict(d["admission_kwargs"])
         return d
 
     @classmethod
@@ -578,9 +594,12 @@ class BPEngine:
         per-sub-bucket max in ``run_many``) can legitimately alter
         RnBP/RBP trajectories -- the fixed point, not the answer quality.
 
-        For online iterators, pipelined host/device overlap, and bucket
-        compaction, use ``repro.core.serving.serve_async`` (bitwise-equal
-        per-request results on the same materialized stream).
+        For online iterators, pipelined host/device overlap, bucket
+        compaction, non-FIFO admission policies, and threaded ingestion,
+        use ``repro.core.serving.serve_async`` (bitwise-equal per-request
+        results on the same materialized stream). The config's
+        ``admission`` policy applies here too (the default ``"fifo"``
+        reproduces the historic cadence exactly).
         """
         from repro.core.serving import serve_async
         rep = serve_async(self, list(stream), rng, growth=growth,

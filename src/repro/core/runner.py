@@ -26,6 +26,8 @@ from repro.core.engine import BPConfig, BPEngine, BPResult  # noqa: F401
 from repro.core.graph import PGM
 from repro.core.schedulers.base import Scheduler
 
+__all__ = ["run_bp"]
+
 
 def run_bp(pgm: PGM,
            scheduler: Scheduler,

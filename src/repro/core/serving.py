@@ -25,35 +25,59 @@ pipeline:
   the dead-slot sweeps that evacuation alone cannot -- a slot with no
   pending work to backfill still costs one device sweep per loop iteration
   at the old width.
+- **admission policies**: *which staged request enters a bucket when* is a
+  pluggable :class:`AdmissionPolicy` resolved through the
+  ``ADMISSION_POLICIES`` registry (mirroring the scheduler and update-
+  backend registries): ``"fifo"`` is the arrival-order default (bitwise the
+  pre-policy behavior), ``"residual"`` lifts Residual BP's
+  prioritize-by-expected-effort argument from message scheduling to request
+  admission (a cheap residual-at-admit score, calibrated by per-kind
+  observed-rounds history, co-batches similar-effort requests so stragglers
+  stop pinning buckets of fast peers), and ``"windowed"`` trades a small
+  admission delay for fuller buckets (the p50-latency vs throughput knob).
+  See ``docs/admission.md``.
+- **threaded ingestion**: ``ingest_threads=N`` moves the stream pull onto
+  feeder threads behind a bounded queue, so a source that blocks in
+  ``__next__`` (a socket, a slow producer) no longer stalls device
+  dispatch -- the serving loop keeps stepping resident buckets and drains
+  the feeder opportunistically.
 
 Trajectory invariance is the load-bearing property: a graph's trajectory
 depends only on its own padded shape and RNG key (the batched loop body is
 per-graph gated, and the update runs on a disjoint union), so neither the
-slot count, nor backfill order, nor compaction changes any result bit. On a
-materialized ``Sequence`` the pipeline reuses ``serve``'s group-ceiling
-padding, making ``serve_async`` bitwise-identical to the legacy driver --
-which is now itself a thin wrapper over this module.
+slot count, nor backfill order, nor admission policy, nor compaction
+changes any result bit. On a materialized ``Sequence`` the pipeline reuses
+``serve``'s group-ceiling padding, making ``serve_async`` bitwise-identical
+to the legacy driver -- which is now itself a thin wrapper over this
+module.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import queue as _queue
+import threading
 import time
 from collections import deque
-from typing import Deque, Dict, Iterable, Iterator, List, Sequence, Tuple
+from typing import (Deque, Dict, Iterable, Iterator, List, Mapping, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batch import (BatchedPGM, _pow2_ceil, bucket_key,
-                              bucket_shape, group_ceilings)
+from repro.core.batch import (BatchedPGM, RoundsHistory, _pow2_ceil,
+                              bucket_key, bucket_shape, group_ceilings)
 from repro.core.engine import (BPEngine, BPResult, BPState, ServeStats,
                                _load_slot)
-from repro.core.graph import PGM, pad_pgm_arrays
+from repro.core.graph import NEG_INF, PGM, pad_pgm_arrays
 
-__all__ = ["AsyncServeResult", "AsyncServeStats", "RequestRecord",
-           "ServingPipeline", "serve_async"]
+__all__ = ["ADMISSION_POLICIES", "AdmissionPolicy", "AsyncServeResult",
+           "AsyncServeStats", "FIFOAdmission", "RequestRecord",
+           "ResidualAdmission", "ServingPipeline", "WindowedAdmission",
+           "get_admission_policy", "register_admission_policy",
+           "serve_async"]
 
 
 # --------------------------------------------------------------- records --
@@ -99,7 +123,12 @@ class AsyncServeStats(ServeStats):
     ``(chunk index, width before, width after)`` for each);
     ``buckets_opened`` counts slot admissions (fresh resident batches, i.e.
     compile-relevant shapes seen), and ``staged`` counts requests pulled
-    from the stream and prefetched to the device."""
+    from the stream and prefetched to the device. ``policy`` names the
+    admission policy that drove the run; ``admission_holds`` counts
+    admission checks the policy deferred (a ``windowed`` policy holding a
+    bucket open to fill it); ``admission_widths`` logs the width of every
+    opened bucket (suppressed by ``record_events=False``), the direct
+    observable for the latency-vs-fullness tradeoff."""
 
     compactions: int = 0
     #: (chunk index, width before, width after) per compaction event
@@ -107,6 +136,10 @@ class AsyncServeStats(ServeStats):
         default_factory=list)
     buckets_opened: int = 0
     staged: int = 0
+    policy: str = "fifo"
+    admission_holds: int = 0
+    #: width of each opened bucket, in admission order
+    admission_widths: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -135,12 +168,25 @@ class AsyncServeResult:
         return out  # type: ignore[return-value]
 
     def latency_percentiles(
-            self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
-        """Queue-to-result latency percentiles in ms, ``{"p50": ...}``
-        (NaN entries when no requests were served)."""
+            self, qs: Sequence[float] = (50, 95, 99), *,
+            field: str = "latency") -> Dict[str, float]:
+        """Latency percentiles in ms, ``{"p50": ...}`` (NaN entries when no
+        requests were served). ``field`` selects the timeline component so
+        admission wait and device residency report separately instead of
+        conflated into one number: ``"latency"`` (queue-in -> result, the
+        end-to-end metric), ``"admission"`` (queue-in -> admit, the wait the
+        admission *policy* controls -- ``windowed`` trades it up, a hot
+        backfill path trades it down), or ``"service"`` (admit -> result,
+        the device-side residency time)."""
+        attrs = {"latency": "latency_s", "admission": "queue_s",
+                 "service": "service_s"}
+        if field not in attrs:
+            raise KeyError(f"field must be one of {sorted(attrs)}, "
+                           f"got {field!r}")
         if not self.records:
             return {f"p{q:g}": float("nan") for q in qs}
-        lat = np.array([r.latency_s for r in self.records]) * 1e3
+        lat = np.array([getattr(r, attrs[field])
+                        for r in self.records]) * 1e3
         return {f"p{q:g}": float(np.percentile(lat, q)) for q in qs}
 
 
@@ -149,15 +195,22 @@ class AsyncServeResult:
 @dataclasses.dataclass
 class _Staged:
     """A request staged for admission: padded to its group's ceilings and
-    already ``device_put`` (the prefetch)."""
+    already ``device_put`` (the prefetch). ``score`` is the admission
+    policy's effort estimate (0.0 under FIFO); ``passed_over`` counts takes
+    that skipped this request while it was the queue head (the residual
+    policy's aging/no-starvation counter)."""
     rid: int
     elem: PGM
     key: jax.Array
     t_enqueue: float
+    score: float = 0.0
+    passed_over: int = 0
 
 
 class _Group:
-    """One shape family: fixed padded-shape ceilings + its pending queue."""
+    """One shape family: fixed padded-shape ceilings + its pending queue
+    (enqueue order; policies may remove from the middle, so the head is
+    always the oldest *remaining* request)."""
 
     __slots__ = ("ceilings", "queue")
 
@@ -175,7 +228,8 @@ class _Slot:
     live: List[int | None]
     rounds_host: np.ndarray
     r_before: np.ndarray
-    meta: Dict[int, Tuple[float, float]]    # rid -> (t_enqueue, t_admit)
+    #: rid -> (t_enqueue, t_admit, admission score)
+    meta: Dict[int, Tuple[float, float, float]]
 
     @property
     def width(self) -> int:
@@ -203,6 +257,422 @@ def _narrow_state(state: BPState, idx: Sequence[int]) -> BPState:
         max_residual=take(state.max_residual))
 
 
+# ----------------------------------------------------- admission policies --
+
+def _residual_at_admit(arrs: Mapping[str, np.ndarray]) -> float:
+    """Max L-inf residual of one BP step from uniform messages, computed
+    host-side in numpy over the padded arrays ``pad_pgm_arrays`` produced.
+
+    This is the paper's residual r(m) (Eq. 4) evaluated at the initial
+    message state -- the same quantity Residual BP prioritizes *messages*
+    by, here evaluated once per *request* as its admission score. Numpy on
+    purpose: scoring happens at staging time on the serving/feeder thread,
+    and a jnp pass would pay one XLA compilation per fresh shape (the exact
+    warm-up the numpy staging path exists to avoid)."""
+    emask = np.asarray(arrs["edge_mask"])                      # (E,)
+    smask = np.asarray(arrs["state_mask"])                     # (V, S)
+    dst = np.asarray(arrs["edge_dst"])
+    src = np.asarray(arrs["edge_src"])
+    n_states = np.asarray(arrs["n_states"]).astype(np.float64)
+    dst_mask = smask[dst]                                      # (E, S)
+    logm = np.where(dst_mask, -np.log(n_states[dst])[:, None], NEG_INF)
+    contrib = np.where(emask[:, None], logm, 0.0)
+    vsum = np.zeros_like(smask, dtype=np.float64)
+    np.add.at(vsum, dst, contrib)
+    pre = (np.asarray(arrs["log_psi_v"]) + vsum)[src] \
+        - logm[np.asarray(arrs["edge_rev"])]
+    pre = np.where(smask[src], pre, NEG_INF)
+    scores = np.asarray(arrs["log_psi_e"]) + pre[:, :, None]   # (E, S, S)
+    m = np.maximum(scores.max(axis=1, keepdims=True), NEG_INF)
+    cand = np.squeeze(m, 1) + np.log(
+        np.maximum(np.exp(scores - m).sum(axis=1), 1e-38))
+    x = np.where(dst_mask, cand, NEG_INF)
+    mz = np.maximum(x.max(axis=1, keepdims=True), NEG_INF)
+    z = np.squeeze(mz, 1) + np.log(np.maximum(
+        np.where(dst_mask, np.exp(x - mz), 0.0).sum(axis=1), 1e-38))
+    cand = np.where(dst_mask, cand - z[:, None], NEG_INF)
+    d = np.where(dst_mask, np.abs(cand - logm), 0.0)
+    resid = np.where(emask, d.max(axis=1), 0.0)
+    return float(resid.max())
+
+
+class AdmissionPolicy:
+    """Base admission policy: *which staged request enters a bucket when*.
+
+    The pipeline calls the hooks below at fixed points; the base
+    implementations are exactly the pre-policy FIFO behavior, so a subclass
+    overrides only the decisions it changes. Policies are addressable by
+    string through ``ADMISSION_POLICIES`` (``get_admission_policy``), the
+    same registry pattern as schedulers and update backends, so
+    ``BPConfig(admission="residual")`` stays serializable end-to-end.
+
+    Hooks (called on the serving thread):
+
+    - ``score(pgm, arrs, group)`` -- per-request effort estimate computed at
+      staging time (``arrs`` are the padded numpy arrays, pre-``device_put``).
+    - ``ready(group, now)`` -- may a new bucket open from this group now?
+      (``windowed`` answers no while it gathers a fuller bucket.)
+    - ``pick_group(groups, now)`` -- which ready group admits when a slot
+      frees; default is cross-group FIFO by oldest staged head, the
+      no-starvation choice.
+    - ``take(group, width, slot=None)`` -- remove and return up to ``width``
+      staged requests; ``slot`` is the resident bucket being backfilled
+      (``None`` when opening a fresh bucket).
+    - ``observe(group, score, rounds)`` -- completion feedback: the rounds a
+      released request actually ran (feeds effort calibration).
+    - ``pull_bonus()`` -- extra requests the host should pull beyond
+      ``prefetch`` (``windowed`` raises it to fill a held bucket).
+    - ``wait_hint(groups, now)`` -- seconds the drive loop may sleep when
+      nothing is admissible but work is staged (0 = no wait needed).
+    """
+
+    name = "base"
+
+    def __init__(self):
+        self.pipeline: "ServingPipeline | None" = None
+
+    def bind(self, pipeline: "ServingPipeline") -> "AdmissionPolicy":
+        """Attach to the driving pipeline (called once from its
+        constructor); returns self so construction chains. A policy
+        instance holds pipeline-coupled state (the bound pipeline, any
+        history), so sharing one across pipelines would silently read the
+        wrong pipeline's groups/exhaustion -- rebinding refuses instead:
+        pass a registry spec string (always constructed fresh) or a new
+        instance per pipeline."""
+        if self.pipeline is not None and self.pipeline is not pipeline:
+            raise ValueError(
+                f"{type(self).__name__} instance is already bound to a "
+                "pipeline; admission policies are per-pipeline -- use a "
+                "registry spec string or a fresh instance")
+        self.pipeline = pipeline
+        return self
+
+    def score(self, pgm: PGM, arrs: Mapping[str, np.ndarray],
+              group: _Group) -> float:
+        """Effort estimate for one staged request; FIFO scores nothing."""
+        return 0.0
+
+    def ready(self, group: _Group, now: float) -> bool:
+        """May a fresh bucket open from ``group`` now? FIFO: always."""
+        return True
+
+    def pick_group(self, groups: Iterable[_Group], now: float):
+        """The group to admit from: cross-group FIFO over ready groups
+        (oldest staged head first), or ``None`` when nothing is
+        admissible."""
+        ready = [g for g in groups if g.queue and self.ready(g, now)]
+        return min(ready, key=lambda g: g.queue[0].t_enqueue, default=None)
+
+    def take(self, group: _Group, width: int,
+             slot: "_Slot | None" = None) -> List[_Staged]:
+        """Remove and return up to ``width`` staged requests from
+        ``group``'s queue. FIFO pops the oldest."""
+        return [group.queue.popleft()
+                for _ in range(min(width, len(group.queue)))]
+
+    def observe(self, group: _Group, score: float, rounds: int) -> None:
+        """Completion feedback for one released request; FIFO ignores it."""
+
+    def pull_bonus(self) -> int:
+        """Extra pull target beyond ``prefetch`` (0 for FIFO)."""
+        return 0
+
+    def wait_hint(self, groups: Iterable[_Group], now: float) -> float:
+        """Seconds the drive loop may sleep when work is staged but nothing
+        is admissible (only a holding policy returns > 0)."""
+        return 0.0
+
+
+class FIFOAdmission(AdmissionPolicy):
+    """Arrival-order admission -- the default, and bitwise the pre-policy
+    pipeline: buckets open from the group whose staged head has waited
+    longest, requests enter in enqueue order, backfill pops the oldest.
+    Zero scoring cost; the right choice when requests are effort-homogeneous
+    or latency fairness dominates."""
+
+    name = "fifo"
+
+
+class ResidualAdmission(AdmissionPolicy):
+    """Expected-effort admission: co-batch requests that will run similarly
+    long, so stragglers stop pinning buckets of already-finished peers.
+
+    Residual BP (Elidan et al.) orders *message* updates by residual --
+    spend work where convergence is farthest. This policy lifts that idea
+    one level up, to request admission: every staged request is scored by
+    its **residual at admit** (one numpy BP step from uniform messages, the
+    paper's r(m) evaluated at the initial state), and a per-kind
+    :class:`~repro.core.batch.RoundsHistory` calibrates that proxy into
+    expected rounds from what similar requests actually ran. Buckets are
+    then composed by similarity: a fresh bucket seeds with the *oldest*
+    staged request and fills with the nearest expected-effort neighbors;
+    backfill picks the staged request closest to the mean expected effort
+    of the slot's live occupants. Fast-converging requests ride
+    fast buckets that release early; long-running ones co-batch and do
+    useful work together -- the gated chunk body then wastes no sweeps on
+    mixed-effort buckets (see ``BENCH_batch.json`` ``admission_policies``).
+
+    No-starvation: a fresh bucket always seeds with the oldest head, and a
+    head skipped by ``aging`` consecutive takes is force-admitted next, so
+    on any stream in which takes keep happening every staged request is
+    admitted after at most ``aging`` further takes once it reaches the
+    head. ``history_capacity`` bounds per-kind feedback kept
+    (:class:`~repro.core.batch.RoundsHistory`)."""
+
+    name = "residual"
+
+    def __init__(self, aging: int = 16, history_capacity: int = 64):
+        super().__init__()
+        if aging < 1:
+            raise ValueError(f"aging must be >= 1, got {aging}")
+        self.aging = aging
+        self.history = RoundsHistory(capacity=history_capacity)
+
+    def score(self, pgm: PGM, arrs: Mapping[str, np.ndarray],
+              group: _Group) -> float:
+        return _residual_at_admit(arrs)
+
+    def expected(self, group: _Group, score: float) -> float:
+        """Expected rounds for an admission score: the per-kind history's
+        nearest observation, or the raw score before any feedback."""
+        est = self.history.expect(group.ceilings, score)
+        return float(score) if est is None else est
+
+    def take(self, group: _Group, width: int,
+             slot: "_Slot | None" = None) -> List[_Staged]:
+        # Selection cost is O(queue * history_capacity) per take (one
+        # expected() per staged element, each a bounded history scan). The
+        # online path bounds the queue by ``prefetch``, so this is small
+        # per cycle; for huge *materialized* streams (prefetch=None)
+        # prefer a finite prefetch to keep admission work linear.
+        q = group.queue
+        width = min(width, len(q))
+        if width == 0:
+            return []
+        head = q[0]
+        anchor = None
+        forced = head.passed_over >= self.aging
+        if slot is not None and not forced:
+            live = [self.expected(group, slot.meta[r][2])
+                    for r in slot.live if r is not None]
+            if live:
+                anchor = sum(live) / len(live)
+        if anchor is None:
+            anchor = self.expected(group, head.score)
+            forced = True       # fresh bucket (or aged head): seed = oldest
+        exp = [self.expected(group, s.score) for s in q]
+        pick = set(heapq.nsmallest(width, range(len(q)),
+                                   key=lambda i: (abs(exp[i] - anchor), i)))
+        if forced and 0 not in pick:
+            pick.remove(max(pick, key=lambda i: (abs(exp[i] - anchor), i)))
+            pick.add(0)
+        if 0 not in pick:
+            head.passed_over += 1
+        chosen = [q[i] for i in sorted(pick)]
+        kept = [s for i, s in enumerate(q) if i not in pick]
+        q.clear()
+        q.extend(kept)
+        return chosen
+
+    def observe(self, group: _Group, score: float, rounds: int) -> None:
+        self.history.observe(group.ceilings, score, rounds)
+
+
+class WindowedAdmission(AdmissionPolicy):
+    """Delay-for-fullness admission -- the latency-vs-throughput knob.
+
+    FIFO opens a bucket the moment one request is staged, so bursty or slow
+    arrival processes produce narrow buckets that under-fill the device.
+    This policy *holds* a group's first admission while its staged queue is
+    below ``target`` (default: the pipeline's ``max_batch``), for at most
+    ``window_s`` seconds of the head request's waiting time -- trading a
+    bounded p50 admission wait for fuller buckets (fewer compiles, fewer
+    per-bucket fixed costs, better device occupancy). While holding it
+    raises the host's pull target (``pull_bonus``) so the window actually
+    fills instead of merely waiting. Backfill of already-open buckets is
+    never delayed (filling a running bucket is pure win), and exhaustion of
+    the stream makes every group immediately ready, so a final partial
+    bucket never waits out its window.
+
+    The ``window_s`` bound is guaranteed for feeder-backed
+    (``ingest_threads``) and non-blocking sources. A plain iterator that
+    *blocks* in ``__next__`` can overshoot it: the fill pull runs on the
+    serving thread, and a blocked ``next`` cannot be interrupted mid-call
+    -- the general blocking-source caveat, so pair ``windowed`` with
+    ``ingest_threads`` when the source can stall."""
+
+    name = "windowed"
+
+    def __init__(self, window_s: float = 0.01, target: int | None = None):
+        super().__init__()
+        if window_s < 0:
+            raise ValueError(f"window_s must be >= 0, got {window_s}")
+        if target is not None and target < 1:
+            raise ValueError(f"target must be >= 1, got {target}")
+        self.window_s = window_s
+        self.target = target
+
+    def _target(self) -> int:
+        assert self.pipeline is not None
+        return self.target or self.pipeline.max_batch or 0
+
+    def ready(self, group: _Group, now: float) -> bool:
+        assert self.pipeline is not None
+        if self.pipeline._exhausted:
+            return True
+        t = self._target()
+        if t and len(group.queue) >= t:
+            return True
+        return now - group.queue[0].t_enqueue >= self.window_s
+
+    def pull_bonus(self) -> int:
+        assert self.pipeline is not None
+        t = self._target()
+        if not t:
+            return 0
+        return sum(max(0, t - len(g.queue))
+                   for g in self.pipeline._groups.values() if g.queue)
+
+    def wait_hint(self, groups: Iterable[_Group], now: float) -> float:
+        rem = [self.window_s - (now - g.queue[0].t_enqueue)
+               for g in groups if g.queue]
+        rem = [r for r in rem if r > 0]
+        return min(rem) if rem else 0.0
+
+
+#: name -> AdmissionPolicy class; names are the canonical serialized form
+#: (``BPConfig(admission=...)`` / ``serve_async(admission=...)``).
+ADMISSION_POLICIES: Dict[str, type] = {
+    "fifo": FIFOAdmission,
+    "residual": ResidualAdmission,
+    "windowed": WindowedAdmission,
+}
+
+
+def register_admission_policy(name: str):
+    """Class decorator registering an :class:`AdmissionPolicy` subclass
+    under ``name`` (lowercased), making it addressable by string spec --
+    ``serve_async(..., admission="mine")`` -- exactly like
+    ``register_scheduler`` does for schedulers. The class must be
+    constructible from keyword arguments so specs stay serializable."""
+    key = name.lower()
+
+    def deco(cls: type) -> type:
+        ADMISSION_POLICIES[key] = cls
+        return cls
+
+    return deco
+
+
+def get_admission_policy(spec, **kwargs) -> AdmissionPolicy:
+    """Resolve an admission-policy spec: a registry name (+ constructor
+    kwargs) or an already-built :class:`AdmissionPolicy` instance (kwargs
+    must then be empty). The string form is what ``BPConfig.admission``
+    serializes."""
+    if isinstance(spec, str):
+        key = spec.lower()
+        if key not in ADMISSION_POLICIES:
+            raise KeyError(f"unknown admission policy {spec!r}; registered: "
+                           f"{sorted(ADMISSION_POLICIES)}")
+        return ADMISSION_POLICIES[key](**kwargs)
+    if kwargs:
+        raise ValueError("admission kwargs only apply to string specs, got "
+                         f"instance {type(spec).__name__} plus {kwargs}")
+    return spec
+
+
+# ----------------------------------------------------- threaded ingestion --
+
+_FEEDER_DONE = object()
+_FEEDER_EXHAUSTED = object()
+
+
+class _IngestFeeder:
+    """Feeder threads pulling the request iterator into a bounded queue.
+
+    The stream's ``__next__`` runs on daemon feeder threads (serialized by
+    a lock, so any plain iterator is safe); pulled items enter a
+    ``queue.Queue(maxsize)`` whose bound is the host-memory guard -- a full
+    queue blocks the *feeder*, never the serving loop. Each item is stamped
+    under the lock with its arrival index (the auto-rid, so rid assignment
+    matches the unthreaded path item for item) and its pull time (the
+    request's ``t_enqueue``). Iterator exceptions are captured and re-raised
+    on the serving thread once the queue drains. ``close()`` (called from
+    ``serve``'s finally, so an abandoned generator or a staging-time error
+    cannot leak threads) stops the workers: puts are bounded waits
+    re-checking the stop flag, so a worker blocked on a full queue exits
+    promptly instead of pinning the source forever."""
+
+    def __init__(self, it: Iterator, threads: int, maxsize: int):
+        self._it = it
+        self._lock = threading.Lock()
+        self._q: _queue.Queue = _queue.Queue(maxsize=max(1, maxsize))
+        self._n = 0
+        self._live = threads
+        self._error: BaseException | None = None
+        self._stop = False
+        for _ in range(threads):
+            threading.Thread(target=self._worker, daemon=True).start()
+
+    def _put(self, x) -> bool:
+        """Bounded-wait put that aborts once ``close()`` ran (a plain
+        blocking put could pin a worker on a full queue forever)."""
+        while not self._stop:
+            try:
+                self._q.put(x, timeout=0.05)
+                return True
+            except _queue.Full:
+                continue
+        return False
+
+    def _worker(self) -> None:
+        while True:
+            with self._lock:
+                if self._error is not None or self._stop:
+                    break
+                try:
+                    item = next(self._it)
+                except StopIteration:
+                    break
+                except BaseException as e:     # surface on serving thread
+                    self._error = e
+                    break
+                rid, self._n = self._n, self._n + 1
+                t = time.perf_counter()
+            if not self._put((rid, item, t)):  # blocks when full: the bound
+                return
+        self._put(_FEEDER_DONE)
+
+    def close(self) -> None:
+        """Stop the feeder: workers quit pulling at their next check, and
+        the queue is drained so any worker blocked in ``put`` unblocks
+        (dropping staged-but-unserved items -- the caller abandoned them)."""
+        self._stop = True
+        while True:
+            try:
+                self._q.get_nowait()
+            except _queue.Empty:
+                return
+
+    def get(self, block: bool):
+        """Next ``(auto_rid, item, t_pull)``; ``None`` when nothing is
+        available right now (non-blocking miss), or the exhausted sentinel
+        once every feeder thread has finished."""
+        while True:
+            try:
+                got = self._q.get(block=block)
+            except _queue.Empty:
+                return None
+            if got is _FEEDER_DONE:
+                self._live -= 1
+                if self._live == 0:
+                    if self._error is not None:
+                        raise self._error
+                    return _FEEDER_EXHAUSTED
+                continue
+            return got
+
+
 # --------------------------------------------------------------- pipeline --
 
 class ServingPipeline:
@@ -217,20 +687,27 @@ class ServingPipeline:
     double-buffering; 1 reproduces the legacy serve cadence exactly);
     ``prefetch`` is the staged-request low-water mark the host keeps pulled
     ahead of admission (``None`` = drain the stream eagerly up front);
-    ``evacuate``/``compact`` toggle the straggler policies;
-    ``record_events=False`` drops the per-request evacuation/compaction
-    logs (counters stay), bounding host memory on indefinitely long
-    streams; ``plan`` maps a ``bucket_key`` to explicit group ceilings
-    (the materialized-stream compat path) -- without it each request pads
-    to its own deterministic ``bucket_shape`` ceilings, the online policy.
+    ``evacuate``/``compact`` toggle the straggler policies; ``admission``
+    picks the admission policy -- a registry spec string (``"fifo"`` |
+    ``"residual"`` | ``"windowed"``, constructed with ``admission_kwargs``)
+    or a prebuilt :class:`AdmissionPolicy`; ``None`` defers to the engine's
+    ``BPConfig.admission``. ``ingest_threads=N`` moves the stream pull onto
+    ``N`` feeder threads behind a bounded queue (``ingest_queue`` items,
+    default max(prefetch, 2N)) so a source that blocks in ``__next__`` no
+    longer stalls device dispatch. ``record_events=False`` drops the
+    per-request evacuation/compaction/width logs (counters stay), bounding
+    host memory on indefinitely long streams; ``plan`` maps a
+    ``bucket_key`` to explicit group ceilings (the materialized-stream
+    compat path) -- without it each request pads to its own deterministic
+    ``bucket_shape`` ceilings, the online policy.
 
     The stream may yield ``PGM``s (rid = arrival order) or explicit
     ``(rid, PGM)`` pairs. Per-request RNG keys are ``fold_in(rng, rid)``,
-    so results are independent of every pipeline knob; only the *padded
-    shape* policy (plan vs online) can alter stochastic-scheduler
-    trajectories, the caveat shared with ``run_many``. The stream is pulled
-    on the serving thread: a source that blocks in ``__next__`` delays
-    servicing, so wrap genuinely bursty sources in their own queue.
+    so results are independent of every pipeline knob -- admission policy
+    included; only the *padded shape* policy (plan vs online) can alter
+    stochastic-scheduler trajectories, the caveat shared with ``run_many``.
+    Without ``ingest_threads`` the stream is pulled on the serving thread:
+    a source that blocks in ``__next__`` delays servicing.
     """
 
     def __init__(self, engine: BPEngine, rng: jax.Array, *,
@@ -239,7 +716,11 @@ class ServingPipeline:
                  compact: bool = True, slots: int = 2,
                  prefetch: int | None = 8,
                  record_events: bool = True,
-                 plan: Dict[tuple, tuple] | None = None):
+                 plan: Dict[tuple, tuple] | None = None,
+                 admission: "str | AdmissionPolicy | None" = None,
+                 admission_kwargs: Mapping | None = None,
+                 ingest_threads: int = 0,
+                 ingest_queue: int | None = None):
         if engine.is_serial:
             raise NotImplementedError(
                 "serving needs a frontier scheduler (srbp is host-serial)")
@@ -247,6 +728,9 @@ class ServingPipeline:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if max_batch is not None and max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if ingest_threads < 0:
+            raise ValueError(
+                f"ingest_threads must be >= 0, got {ingest_threads}")
         cfg = engine.config
         self.engine = engine
         self.rng = rng
@@ -260,7 +744,15 @@ class ServingPipeline:
         self.prefetch = prefetch
         self.record_events = record_events
         self.plan = plan
-        self.stats = AsyncServeStats()
+        self.ingest_threads = ingest_threads
+        self.ingest_queue = ingest_queue
+        if admission is None:
+            admission = getattr(cfg, "admission", "fifo")
+            if admission_kwargs is None:
+                admission_kwargs = dict(getattr(cfg, "admission_kwargs", ()))
+        self.policy = get_admission_policy(
+            admission, **dict(admission_kwargs or {})).bind(self)
+        self.stats = AsyncServeStats(policy=self.policy.name)
         self._groups: Dict[tuple, _Group] = {}
         self._exhausted = False
         self._arrival = 0
@@ -292,28 +784,46 @@ class ServingPipeline:
         group = self._group_for(pgm)
         e, v, s, re_, rv = group.ceilings
         arrs = pad_pgm_arrays(pgm, n_edges=e, n_vertices=v, n_states=s)
+        score = self.policy.score(pgm, arrs, group)
         # The prefetch: H2D starts now, overlapped with device compute.
         elem = PGM(n_real_vertices=rv, n_real_edges=re_,
                    **jax.device_put(arrs))
         group.queue.append(_Staged(
-            rid, elem, jax.random.fold_in(self.rng, rid), t_enqueue))
+            rid, elem, jax.random.fold_in(self.rng, rid), t_enqueue,
+            score=score))
         self.stats.staged += 1
 
-    def _pump(self, it: Iterator, target: float) -> None:
-        """Pull requests until ``target`` are staged (or the stream ends)."""
-        while (not self._exhausted
-               and sum(len(g.queue) for g in self._groups.values()) < target):
-            try:
-                item = next(it)
-            except StopIteration:
-                self._exhausted = True
-                return
-            t = time.perf_counter()
+    def _staged_count(self) -> int:
+        return sum(len(g.queue) for g in self._groups.values())
+
+    def _pump(self, it, target: float, block: bool = False) -> None:
+        """Pull requests until ``target`` are staged (or the stream ends).
+        With a feeder source, ``block=False`` only drains what the feeder
+        already pulled (an empty feeder queue returns immediately -- the
+        non-stalling property); a plain iterator blocks in ``next`` either
+        way."""
+        while not self._exhausted and self._staged_count() < target:
+            if isinstance(it, _IngestFeeder):
+                got = it.get(block)
+                if got is None:
+                    return
+                if got is _FEEDER_EXHAUSTED:
+                    self._exhausted = True
+                    return
+                rid_auto, item, t = got
+            else:
+                try:
+                    item = next(it)
+                except StopIteration:
+                    self._exhausted = True
+                    return
+                t = time.perf_counter()
+                rid_auto = self._arrival
             if isinstance(item, tuple):
                 rid, pgm = item
                 self._explicit_rids = True
             else:
-                rid, pgm = self._arrival, item
+                rid, pgm = rid_auto, item
             self._arrival += 1
             self._stage(int(rid), pgm, t)
 
@@ -321,22 +831,25 @@ class ServingPipeline:
 
     def _admit(self, group: _Group) -> _Slot:
         """Open a resident bucket from the group's queue: width =
-        min(max_batch, pending), stacked from prefetched elements."""
+        min(max_batch, pending), composition chosen by the admission
+        policy, stacked from prefetched elements."""
         width = min(self.max_batch or len(group.queue), len(group.queue))
-        take = [group.queue.popleft() for _ in range(width)]
+        take = self.policy.take(group, width)
         batch = BatchedPGM(pgm=jax.tree.map(
             lambda *xs: jnp.stack(xs), *[s.elem for s in take]))
         keys = jnp.stack([s.key for s in take])
         state = self.engine.init(batch, keys)
         t = time.perf_counter()
         self.stats.buckets_opened += 1
+        if self.record_events:
+            self.stats.admission_widths.append(len(take))
         return _Slot(group=group, state=state,
                      live=[s.rid for s in take],
-                     rounds_host=np.zeros(width, np.int64),
-                     r_before=np.zeros(width, np.int64),
-                     meta={s.rid: (s.t_enqueue, t) for s in take})
+                     rounds_host=np.zeros(len(take), np.int64),
+                     r_before=np.zeros(len(take), np.int64),
+                     meta={s.rid: (s.t_enqueue, t, s.score) for s in take})
 
-    def _release(self, slot: _Slot, j: int) -> RequestRecord:
+    def _release(self, slot: _Slot, j: int, rounds: int) -> RequestRecord:
         rid = slot.live[j]
         assert rid is not None
         result = self.engine._slice_result(slot.state, j)
@@ -344,17 +857,19 @@ class ServingPipeline:
         self.stats.evacuated += 1
         if self.record_events:      # O(requests) log; off for infinite streams
             self.stats.evacuation_log.append((self.stats.chunks, rid))
-        t_enq, t_adm = slot.meta.pop(rid)
+        t_enq, t_adm, score = slot.meta.pop(rid)
+        self.policy.observe(slot.group, score, rounds)
         return RequestRecord(rid=rid, result=result, t_enqueue=t_enq,
                              t_admit=t_adm, t_done=time.perf_counter())
 
     def _backfill(self, slot: _Slot, j: int) -> None:
-        staged = slot.group.queue.popleft()
+        staged = self.policy.take(slot.group, 1, slot=slot)[0]
         slot.state = _load_slot(slot.state, jnp.int32(j), staged.elem,
                                 staged.key, scheduler=self.engine.scheduler)
         slot.live[j] = staged.rid
         slot.rounds_host[j] = 0
-        slot.meta[staged.rid] = (staged.t_enqueue, time.perf_counter())
+        slot.meta[staged.rid] = (staged.t_enqueue, time.perf_counter(),
+                                 staged.score)
         self.stats.backfilled += 1
 
     def _maybe_compact(self, slot: _Slot) -> None:
@@ -404,13 +919,13 @@ class ServingPipeline:
             if all(bool(done[j]) or r_after[j] >= max_rounds
                    for j in range(slot.width)):
                 for j in range(slot.width):
-                    yield self._release(slot, j)
+                    yield self._release(slot, j, int(r_after[j]))
             return
         for j in range(slot.width):
             if slot.live[j] is None:
                 continue
             if bool(done[j]) or r_after[j] >= max_rounds:
-                yield self._release(slot, j)
+                yield self._release(slot, j, int(r_after[j]))
                 if slot.group.queue:
                     self._backfill(slot, j)
         # Slots that went dead while the queue was momentarily empty are
@@ -424,37 +939,81 @@ class ServingPipeline:
 
     # -- the drive loop ----------------------------------------------------
 
+    def _admissible(self) -> _Group | None:
+        """The group the admission policy would open a bucket from now
+        (cross-group FIFO under the default policies, so a minority shape
+        family cannot starve behind a sustained majority one)."""
+        return self.policy.pick_group(self._groups.values(),
+                                      time.perf_counter())
+
+    def _await_work(self, it) -> bool:
+        """Nothing is resident: wait until something becomes admissible.
+        Returns False when serving is finished (stream exhausted, nothing
+        staged). Blocks on the source only when nothing at all is staged;
+        when work is staged but held (an open admission window), pulls
+        toward the policy's fill target and sleeps out (a slice of) the
+        window instead."""
+        if not self._staged_count():
+            if self._exhausted:
+                return False
+            self._pump(it, 1, block=True)
+            return bool(self._staged_count()) or not self._exhausted
+        before = self._staged_count()
+        target = before + self.policy.pull_bonus()
+        if target > before:
+            self._pump(it, target)
+        hint = self.policy.wait_hint(self._groups.values(),
+                                     time.perf_counter())
+        if self._staged_count() == before and hint > 0:
+            time.sleep(min(hint, 0.05))
+        return True
+
     def serve(self, stream: Iterable) -> Iterator[RequestRecord]:
         """Drive ``stream`` through the pipeline, yielding one
         ``RequestRecord`` per request in completion order.
 
-        Each cycle: (1) admit staged groups into free slots, (2) dispatch a
-        chunk on every slot (JAX async dispatch -- non-blocking), (3) pull
-        and stage new arrivals while the device runs, (4) sync + service
-        each slot, yielding released results. Terminates when the stream is
-        exhausted and every admitted graph has been released."""
+        Each cycle: (1) admit staged groups into free slots (which groups,
+        which requests, and when are the admission policy's calls), (2)
+        dispatch a chunk on every slot (JAX async dispatch -- non-blocking),
+        (3) pull and stage new arrivals while the device runs (from the
+        feeder queue when ``ingest_threads`` is set, never blocking on the
+        source), (4) sync + service each slot, yielding released results.
+        Terminates when the stream is exhausted and every admitted graph
+        has been released."""
         it = iter(stream)
+        if self.ingest_threads:
+            bound = self.ingest_queue or max(self.prefetch or 8,
+                                             2 * self.ingest_threads)
+            it = _IngestFeeder(it, self.ingest_threads, bound)
+        try:
+            yield from self._drive(it)
+        finally:
+            # An abandoned generator or a staging error must not leak
+            # feeder threads blocked on a full queue.
+            if isinstance(it, _IngestFeeder):
+                it.close()
+
+    def _drive(self, it) -> Iterator[RequestRecord]:
+        """The cycle loop behind ``serve`` (source already feeder-wrapped)."""
         resident: List[_Slot] = []
         if self.prefetch is None:
-            self._pump(it, float("inf"))
-        # Cross-group FIFO: admit the group whose head request has waited
-        # longest, so a minority shape family cannot starve behind a
-        # sustained majority one.
-        def oldest():
-            return min((g for g in self._groups.values() if g.queue),
-                       key=lambda g: g.queue[0].t_enqueue, default=None)
-
+            self._pump(it, float("inf"), block=True)
         while True:
             while len(resident) < self.slots:
-                group = oldest()
+                group = self._admissible()
                 if group is None:
-                    self._pump(it, max(1, self.prefetch or 1))
-                    group = oldest()
+                    self._pump(it, max(1, self.prefetch or 1)
+                               + self.policy.pull_bonus())
+                    group = self._admissible()
                     if group is None:
-                        break                   # stream exhausted, all staged
+                        if self._staged_count():   # held by an open window
+                            self.stats.admission_holds += 1
+                        break
                 resident.append(self._admit(group))
             if not resident:
-                return
+                if not self._await_work(it):
+                    return
+                continue
             for slot in resident:
                 slot.r_before = slot.rounds_host.copy()
                 slot.state = self.engine.step(slot.state,
@@ -463,10 +1022,12 @@ class ServingPipeline:
                 # Host-side staging overlapped with the in-flight chunks.
                 # Dead slots whose group queue is empty raise the pull
                 # target: staged work from *other* groups must not stop us
-                # from fetching requests that could revive them.
+                # from fetching requests that could revive them. A holding
+                # policy (windowed) adds its fill deficit on top.
                 hunger = sum(1 for slot in resident for rid in slot.live
                              if rid is None and not slot.group.queue)
-                self._pump(it, self.prefetch + hunger)
+                self._pump(it, self.prefetch + hunger
+                           + self.policy.pull_bonus())
             for slot in list(resident):
                 yield from self._service(slot)
                 if all(rid is None for rid in slot.live):
@@ -495,7 +1056,11 @@ def serve_async(engine: BPEngine, stream, rng: jax.Array, *,
                 chunk_rounds: int | None = None, evacuate: bool = True,
                 compact: bool = True, slots: int = 2,
                 prefetch: int | None = 8,
-                record_events: bool = True) -> AsyncServeResult:
+                record_events: bool = True,
+                admission: "str | AdmissionPolicy | None" = None,
+                admission_kwargs: Mapping | None = None,
+                ingest_threads: int = 0,
+                ingest_queue: int | None = None) -> AsyncServeResult:
     """Serve a request stream through the asynchronous pipeline.
 
     ``stream`` is either a materialized ``Sequence[PGM]`` -- padded with the
@@ -503,15 +1068,23 @@ def serve_async(engine: BPEngine, stream, rng: jax.Array, *,
     identical* to ``BPEngine.serve`` on the same inputs -- or any iterator
     of PGMs (the online path: each request pads to its deterministic
     ``bucket_shape`` ceilings the moment it arrives, no global knowledge
-    needed). See :class:`ServingPipeline` for the knobs; this wrapper just
-    collects the generator into an :class:`AsyncServeResult` (records in
-    completion order, ``.results`` in input order)."""
+    needed). ``admission``/``admission_kwargs`` select the admission policy
+    (``"fifo"`` | ``"residual"`` | ``"windowed"``; ``None`` defers to the
+    engine's ``BPConfig.admission``) and ``ingest_threads``/``ingest_queue``
+    enable the threaded ingestion feeder -- see :class:`ServingPipeline`
+    and ``docs/admission.md``. This wrapper just collects the generator
+    into an :class:`AsyncServeResult` (records in completion order,
+    ``.results`` in input order)."""
     plan = None
     if isinstance(stream, Sequence):
         plan, stream = _materialized_plan(list(stream), growth)
     pipe = ServingPipeline(engine, rng, growth=growth, max_batch=max_batch,
                            chunk_rounds=chunk_rounds, evacuate=evacuate,
                            compact=compact, slots=slots, prefetch=prefetch,
-                           record_events=record_events, plan=plan)
+                           record_events=record_events, plan=plan,
+                           admission=admission,
+                           admission_kwargs=admission_kwargs,
+                           ingest_threads=ingest_threads,
+                           ingest_queue=ingest_queue)
     records = list(pipe.serve(stream))
     return AsyncServeResult(records=records, stats=pipe.stats)

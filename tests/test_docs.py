@@ -1,10 +1,11 @@
 """Documentation contract: the public API is documented and the docs are
 true. Docstring checks cover every symbol exported from ``repro.core``,
-``repro.core.engine``, ``repro.core.serving``, ``repro.core.batch`` and
-``repro.dist``; the code blocks in ``docs/engine.md`` and
-``docs/serving.md`` are executed verbatim (they are the living spec of the
-engine and the serving pipeline); relative links between the markdown files
-must resolve, and README's doc table must link every file in ``docs/``."""
+``repro.core.engine``, ``repro.core.serving``, ``repro.core.batch``,
+``repro.core.runner`` and ``repro.dist``; the code blocks in
+``docs/engine.md``, ``docs/serving.md`` and ``docs/admission.md`` are
+executed verbatim (they are the living spec of the engine and the serving
+pipeline); relative links between the markdown files must resolve, and
+README's doc table must link every file in ``docs/``."""
 
 import inspect
 import pathlib
@@ -16,7 +17,7 @@ DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs"
 REPO = DOCS.parent
 
 PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.core.serving",
-                  "repro.core.batch", "repro.dist"]
+                  "repro.core.batch", "repro.core.runner", "repro.dist"]
 
 
 def _public_objects(modname):
@@ -46,7 +47,8 @@ def _code_blocks(md_path):
 
 
 @pytest.mark.parametrize("md,min_blocks", [("engine.md", 3),
-                                           ("serving.md", 3)])
+                                           ("serving.md", 3),
+                                           ("admission.md", 3)])
 def test_md_code_blocks_execute(md, min_blocks):
     blocks = _code_blocks(DOCS / md)
     assert len(blocks) >= min_blocks, f"{md} lost its executable examples"
@@ -60,7 +62,8 @@ def test_md_code_blocks_execute(md, min_blocks):
 
 @pytest.mark.parametrize("md", ["README.md", "docs/architecture.md",
                                 "docs/schedulers.md", "docs/engine.md",
-                                "docs/sharding.md", "docs/serving.md"])
+                                "docs/sharding.md", "docs/serving.md",
+                                "docs/admission.md"])
 def test_relative_links_resolve(md):
     path = REPO / md
     broken = []

@@ -8,12 +8,16 @@ and compaction may change *scheduling* (sweep accounting, completion order)
 but never a result bit.
 """
 
+import time
+
 import jax
 import numpy as np
 import pytest
 
-from repro.core import (BPConfig, BPEngine, BatchedPGM, ServingPipeline,
-                        serve_async)
+from repro.core import (ADMISSION_POLICIES, AdmissionPolicy, BPConfig,
+                        BPEngine, BatchedPGM, FIFOAdmission, RoundsHistory,
+                        ServingPipeline, get_admission_policy,
+                        register_admission_policy, serve_async)
 from repro.core.batch import bucket_shape
 from repro.pgm import chain_graph, ising_grid
 
@@ -217,3 +221,292 @@ class TestOnlineStream:
             assert bucket_shape(p) == (e, v, s, re_, rv)
         with pytest.raises(ValueError):
             bucket_shape(ising_grid(4, 2.0, seed=0), growth=float("inf"))
+
+
+def _effort_mix_stream():
+    # 16 fast + 4 slow (every 5th), one shape family: the residual policy
+    # must separate them into effort-homogeneous buckets.
+    fast = [ising_grid(10, 1.5, seed=s) for s in range(16)]
+    slow = [ising_grid(10, 3.5, seed=s) for s in range(4)]
+    stream, fi, si = [], 0, 0
+    for i in range(20):
+        if i % 5 == 3:
+            stream.append(slow[si]); si += 1
+        else:
+            stream.append(fast[fi]); fi += 1
+    return stream
+
+
+class TestAdmissionPolicies:
+    """Tentpole: pluggable admission. policy="fifo" is bitwise the PR-4
+    pipeline (results AND sweep accounting); "residual" co-batches by
+    expected effort without touching any result bit; "windowed" trades an
+    admission delay for fuller buckets; the registry accepts custom
+    policies."""
+
+    def test_fifo_explicit_matches_default_bitwise_and_stats(self):
+        stream = [ising_grid(6, 2.0, seed=1), chain_graph(40, seed=2),
+                  ising_grid(7, 2.0, seed=3), chain_graph(50, seed=4),
+                  chain_graph(45, seed=5), ising_grid(6, 2.2, seed=6)]
+        engine = BPEngine(BPConfig(scheduler="rnbp",
+                                   scheduler_kwargs={"low_p": 0.4},
+                                   eps=1e-4, max_rounds=400, history=False))
+        kw = dict(max_batch=2, chunk_rounds=32, slots=2)
+        default = serve_async(engine, stream, jax.random.key(0), **kw)
+        explicit = serve_async(engine, stream, jax.random.key(0),
+                               admission="fifo", **kw)
+        assert explicit.stats.policy == "fifo"
+        for got, want in zip(explicit.results, default.results):
+            _assert_bitwise(got, want)
+        for f in ("chunks", "device_sweeps", "useful_sweeps", "evacuated",
+                  "backfilled", "buckets_opened", "admission_widths"):
+            assert getattr(explicit.stats, f) == getattr(default.stats, f)
+
+    @pytest.mark.parametrize("admission,kwargs", [
+        ("residual", {}),
+        ("windowed", {"window_s": 0.0}),
+    ])
+    def test_policies_never_change_results(self, admission, kwargs):
+        # Trajectory invariance: same padded shapes + fold_in(rng, rid)
+        # keys make admission order bitwise-invisible, even for the
+        # stochastic scheduler.
+        stream = [ising_grid(6, 2.0, seed=1), chain_graph(40, seed=2),
+                  ising_grid(7, 2.0, seed=3), chain_graph(50, seed=4)]
+        engine = BPEngine(BPConfig(scheduler="rnbp",
+                                   scheduler_kwargs={"low_p": 0.4},
+                                   eps=1e-4, max_rounds=400, history=False))
+        kw = dict(max_batch=2, chunk_rounds=32, slots=1, prefetch=None)
+        fifo = serve_async(engine, stream, jax.random.key(0),
+                           admission="fifo", **kw)
+        other = serve_async(engine, stream, jax.random.key(0),
+                            admission=admission, admission_kwargs=kwargs,
+                            **kw)
+        for got, want in zip(other.results, fifo.results):
+            _assert_bitwise(got, want)
+
+    def test_residual_cobatching_cuts_wasted_sweeps(self):
+        """Acceptance: residual admission <= FIFO wasted sweeps at equal
+        slots on the straggler mix, with identical useful work."""
+        stream = _effort_mix_stream()
+        engine = BPEngine(BPConfig(scheduler="lbp", eps=1e-5,
+                                   max_rounds=384, history=False))
+        kw = dict(max_batch=4, chunk_rounds=48, slots=1, compact=False,
+                  prefetch=None)
+        fifo = serve_async(engine, stream, jax.random.key(0),
+                           admission="fifo", **kw)
+        resid = serve_async(engine, stream, jax.random.key(0),
+                            admission="residual", **kw)
+        assert resid.stats.useful_sweeps == fifo.stats.useful_sweeps
+        assert resid.stats.wasted_sweeps <= fifo.stats.wasted_sweeps
+        assert resid.stats.device_sweeps < fifo.stats.device_sweeps
+        for got, want in zip(resid.results, fifo.results):
+            _assert_bitwise(got, want)
+
+    def test_residual_no_starvation_aging(self):
+        """A straggler the similarity rule keeps skipping is force-admitted
+        after `aging` takes once it reaches the queue head -- it must not
+        wait out the whole fast stream."""
+        stream = ([ising_grid(8, 1.5, seed=0), ising_grid(8, 1.5, seed=1),
+                   ising_grid(8, 3.5, seed=0)]
+                  + [ising_grid(8, 1.5, seed=s) for s in range(2, 26)])
+        slow_rid = 2
+        engine = _lbp_engine(max_rounds=384)
+        rep = serve_async(engine, stream, jax.random.key(0), max_batch=2,
+                          chunk_rounds=32, slots=1, compact=False,
+                          prefetch=None, admission="residual",
+                          admission_kwargs={"aging": 4})
+        assert sorted(r.rid for r in rep.records) == list(range(len(stream)))
+        by_rid = {r.rid: r for r in rep.records}
+        admitted_after_slow = sum(
+            1 for r in rep.records if r.t_admit > by_rid[slow_rid].t_admit)
+        # forced admission happened well before the fast queue drained
+        assert admitted_after_slow >= 10
+
+    def test_windowed_gathers_fuller_buckets(self):
+        """With a huge window the first bucket fills to max_batch before
+        opening (FIFO opens at the prefetch watermark); exhaustion makes
+        the tail admissible so nothing waits out the window."""
+        def online():
+            for s in range(6):
+                yield ising_grid(6, 1.5, seed=s)
+
+        engine = _lbp_engine(max_rounds=160)
+        kw = dict(max_batch=4, chunk_rounds=64, slots=1, prefetch=2)
+        fifo = serve_async(engine, online(), jax.random.key(0), **kw)
+        wind = serve_async(engine, online(), jax.random.key(0),
+                           admission="windowed",
+                           admission_kwargs={"window_s": 30.0}, **kw)
+        assert fifo.stats.admission_widths[0] == 2
+        assert wind.stats.admission_widths[0] == 4
+        assert wind.stats.admission_holds >= 1
+        assert sorted(r.rid for r in wind.records) == list(range(6))
+        for got, want in zip(wind.results, fifo.results):
+            _assert_bitwise(got, want)
+
+    def test_registry_and_custom_policy(self):
+        with pytest.raises(KeyError, match="unknown admission"):
+            get_admission_policy("nope")
+        with pytest.raises(ValueError, match="kwargs"):
+            get_admission_policy(FIFOAdmission(), aging=3)
+
+        @register_admission_policy("lifo-test")
+        class LIFOAdmission(AdmissionPolicy):
+            """Newest-first admission (test-only): take from the tail."""
+            name = "lifo-test"
+
+            def take(self, group, width, slot=None):
+                return [group.queue.pop()
+                        for _ in range(min(width, len(group.queue)))]
+
+        try:
+            assert isinstance(get_admission_policy("lifo-test"),
+                              LIFOAdmission)
+            stream = [ising_grid(6, 1.5, seed=s) for s in range(4)]
+            engine = _lbp_engine(max_rounds=160)
+            rep = serve_async(engine, stream, jax.random.key(0),
+                              max_batch=2, chunk_rounds=32, slots=1,
+                              prefetch=None, admission="lifo-test")
+            ref = serve_async(engine, stream, jax.random.key(0),
+                              max_batch=2, chunk_rounds=32, slots=1,
+                              prefetch=None)
+            for got, want in zip(rep.results, ref.results):
+                _assert_bitwise(got, want)
+        finally:
+            ADMISSION_POLICIES.pop("lifo-test", None)
+
+    def test_bpconfig_admission_plumbing(self):
+        import json
+        cfg = BPConfig(scheduler="lbp", eps=1e-5, max_rounds=160,
+                       history=False, admission="windowed",
+                       admission_kwargs={"window_s": 0.0})
+        assert BPConfig.from_dict(
+            json.loads(json.dumps(cfg.to_dict()))) == cfg
+        with pytest.raises(ValueError, match="admission"):
+            BPConfig(admission=FIFOAdmission()).to_dict()
+        # the engine's config default drives the pipeline when no explicit
+        # admission is passed
+        rep = serve_async(BPEngine(cfg),
+                          [ising_grid(6, 1.5, seed=0)], jax.random.key(0))
+        assert rep.stats.policy == "windowed"
+
+    def test_rounds_history(self):
+        h = RoundsHistory(capacity=2)
+        assert h.expect("k", 1.0) is None
+        h.observe("k", 1.0, 100)
+        h.observe("k", 5.0, 300)
+        assert h.expect("k", 1.2) == 100
+        assert h.expect("k", 4.0) == 300
+        h.observe("k", 9.0, 900)        # capacity 2: oldest aged out
+        assert h.expect("k", 1.2) == 300
+        assert len(h) == 2
+        with pytest.raises(ValueError):
+            RoundsHistory(capacity=0)
+
+
+class TestThreadedIngestion:
+    """Satellite: ingest_threads decouples a blocking source from device
+    dispatch via a bounded feeder queue; rid assignment and results match
+    the unthreaded path item for item."""
+
+    def test_blocking_iterator_served_bitwise(self):
+        stream, _ = _straggler_stream()
+
+        def blocking():
+            for i, p in enumerate(stream):
+                if i in (2, 5):
+                    time.sleep(0.05)    # a stalling source
+                yield p
+
+        engine = _lbp_engine(max_rounds=320)
+        kw = dict(max_batch=3, chunk_rounds=48, slots=2, prefetch=4)
+        ref = serve_async(engine, iter(stream), jax.random.key(0), **kw)
+        rep = serve_async(engine, blocking(), jax.random.key(0),
+                          ingest_threads=2, ingest_queue=3, **kw)
+        assert rep.stats.staged == len(stream)
+        assert sorted(r.rid for r in rep.records) == list(range(len(stream)))
+        by_rid = {r.rid: r for r in ref.records}
+        for rec in rep.records:
+            _assert_bitwise(rec.result, by_rid[rec.rid].result)
+
+    def test_feeder_explicit_rids_and_duplicates(self):
+        engine = _lbp_engine(max_rounds=128)
+        rep = serve_async(engine,
+                          iter([(5, ising_grid(6, 1.5, seed=0)),
+                                (1, ising_grid(6, 1.5, seed=1))]),
+                          jax.random.key(0), ingest_threads=1)
+        assert sorted(r.rid for r in rep.records) == [1, 5]
+        with pytest.raises(ValueError, match="duplicate"):
+            serve_async(engine, iter([(3, ising_grid(6, 1.5, seed=0)),
+                                      (3, ising_grid(6, 1.5, seed=1))]),
+                        jax.random.key(0), ingest_threads=1)
+
+    def test_feeder_propagates_source_errors_and_empty(self):
+        engine = _lbp_engine(max_rounds=128)
+
+        def broken():
+            yield ising_grid(6, 1.5, seed=0)
+            raise RuntimeError("source fell over")
+
+        with pytest.raises(RuntimeError, match="fell over"):
+            serve_async(engine, broken(), jax.random.key(0),
+                        ingest_threads=2)
+        empty = serve_async(engine, iter([]), jax.random.key(0),
+                            ingest_threads=2)
+        assert empty.records == []
+
+    def test_admission_wait_reported_separately(self):
+        """Small fix: percentile reporting splits admission wait from
+        device residency instead of conflating them."""
+        stream, _ = _straggler_stream()
+        engine = _lbp_engine(max_rounds=128)
+        rep = serve_async(engine, iter(stream), jax.random.key(0),
+                          max_batch=4, chunk_rounds=32)
+        total = rep.latency_percentiles((50,))
+        wait = rep.latency_percentiles((50,), field="admission")
+        svc = rep.latency_percentiles((50,), field="service")
+        assert wait["p50"] >= 0 and svc["p50"] > 0
+        for rec in rep.records:
+            assert rec.latency_s == pytest.approx(
+                rec.queue_s + rec.service_s)
+        assert total["p50"] <= wait["p50"] + svc["p50"] + 1e-6 \
+            or total["p50"] >= 0     # percentiles of sums need not add up
+        with pytest.raises(KeyError):
+            rep.latency_percentiles((50,), field="bogus")
+
+    def test_feeder_stops_when_generator_abandoned(self):
+        """Closing/abandoning the serve generator must stop the feeder:
+        the source stops being consumed instead of leaking daemon threads
+        that pull (and drop) requests forever."""
+        import threading
+        pulled = []
+
+        def src():
+            for s in range(200):
+                pulled.append(s)
+                yield ising_grid(6, 1.5, seed=s % 4)
+
+        engine = _lbp_engine(max_rounds=128)
+        pipe = ServingPipeline(engine, jax.random.key(0), max_batch=2,
+                               chunk_rounds=32, prefetch=2,
+                               ingest_threads=2, ingest_queue=2)
+        before = threading.active_count()
+        gen = pipe.serve(src())
+        next(gen)               # at least one record served
+        gen.close()             # abandon -> finally -> feeder.close()
+        time.sleep(0.3)         # workers notice the stop flag
+        n = len(pulled)
+        assert n < 200          # bounded queue kept the pull lazy
+        time.sleep(0.3)
+        assert len(pulled) == n  # source no longer being consumed
+        assert threading.active_count() <= before
+
+    def test_policy_instance_cannot_be_shared_across_pipelines(self):
+        """A policy instance holds pipeline-coupled state; rebinding to a
+        second pipeline must refuse loudly instead of silently reading the
+        wrong pipeline's groups."""
+        from repro.core import WindowedAdmission
+        pol = WindowedAdmission(window_s=0.5)
+        engine = _lbp_engine(max_rounds=128)
+        ServingPipeline(engine, jax.random.key(0), admission=pol)
+        with pytest.raises(ValueError, match="already bound"):
+            ServingPipeline(engine, jax.random.key(1), admission=pol)

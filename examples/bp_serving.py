@@ -30,6 +30,11 @@ Knobs:
   --window-ms      windowed policy's admission window
   --ingest-threads feeder threads pulling the stream behind a bounded
                    queue (0 = pull on the serving thread)
+  --scheduler      message scheduler (rnbp default); --backend picks the
+                   update backend -- both flags (and --policy) take their
+                   choices from the live registries via list_schedulers /
+                   list_backends / list_admission_policies, so --help
+                   always shows exactly what is registered
 
 Run:  PYTHONPATH=src python examples/bp_serving.py [--async] [--requests 12]
       PYTHONPATH=src python examples/bp_serving.py --async \
@@ -42,7 +47,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import BPConfig, BPEngine, serve_async
+from repro.core import (BPConfig, BPEngine, list_admission_policies,
+                        list_backends, list_schedulers, serve_async)
 from repro.pgm import chain_graph, ising_grid, protein_like_graph
 
 
@@ -73,9 +79,17 @@ def main():
                     help="rounds per chunk between evacuation sweeps")
     ap.add_argument("--no-evacuate", action="store_true",
                     help="baseline: run each bucket to completion")
+    # choices= come from the registries (repro.core.registry), so the CLI
+    # surface cannot drift from what is actually registered.
     ap.add_argument("--policy", default="fifo",
-                    choices=["fifo", "residual", "windowed"],
+                    choices=list_admission_policies(),
                     help="admission policy (docs/admission.md)")
+    ap.add_argument("--scheduler", default="rnbp",
+                    choices=list_schedulers(),
+                    help="message scheduler (docs/schedulers.md); rnbp "
+                         "(default) uses the paper's protein-run kwargs")
+    ap.add_argument("--backend", default="ref", choices=list_backends(),
+                    help="message-update backend (BPConfig.backend)")
     ap.add_argument("--window-ms", type=float, default=10.0,
                     help="windowed policy: admission window in ms")
     ap.add_argument("--ingest-threads", type=int, default=0,
@@ -83,9 +97,11 @@ def main():
                          "(0 = pull on the serving thread)")
     args = ap.parse_args()
 
+    sched_kwargs = ({"low_p": 0.4, "high_p": 0.9}  # paper's protein run
+                    if args.scheduler == "rnbp" else {})
     engine = BPEngine(BPConfig(
-        scheduler="rnbp",
-        scheduler_kwargs={"low_p": 0.4, "high_p": 0.9},  # paper's protein run
+        scheduler=args.scheduler, scheduler_kwargs=sched_kwargs,
+        backend=args.backend,
         eps=args.eps, max_rounds=6000, history=False))
 
     t_all = time.perf_counter()

@@ -14,11 +14,17 @@ Public API (the unified engine):
   ServingPipeline    the pipeline driver behind serve_async (generator API)
   AdmissionPolicy    admission-policy base + registry (fifo/residual/
                      windowed via get_admission_policy)
-  get_scheduler      registry: "lbp"/"rbp"/"rs"/"rnbp" -> Scheduler
+  get_scheduler      registry: "lbp"/"rbp"/"rs"/"rnbp"/"rlx"/"rlxtree"
+                     -> Scheduler
+  Registry           the shared name->entry registry class behind the
+                     scheduler / update-backend / admission families;
+                     list_schedulers / list_backends /
+                     list_admission_policies enumerate them
 
 Building blocks:
   build_pgm          padded pairwise-MRF builder
   LBP/RBP/RS/RnBP    message schedulings (Table IV)
+  RLX/RLXTree        relaxed multi-queue priority family (2002.11505)
   BatchedPGM, bucket_pgms   vmap-able padded buckets
   ve_marginals, brute_force_marginals, kl_divergence   exact oracles
 
@@ -27,6 +33,7 @@ Deprecated compatibility wrappers (delegate to BPEngine, exact parity):
 """
 
 from repro.core.graph import PGM, build_pgm, pad_pgm, NEG_INF
+from repro.core.registry import Registry
 from repro.core.engine import (BPConfig, BPEngine, BPResult, BPState,
                                ServeResult, ServeStats)
 from repro.core.serving import (ADMISSION_POLICIES, AdmissionPolicy,
@@ -34,14 +41,17 @@ from repro.core.serving import (ADMISSION_POLICIES, AdmissionPolicy,
                                 FIFOAdmission, RequestRecord,
                                 ResidualAdmission, ServingPipeline,
                                 WindowedAdmission, get_admission_policy,
+                                list_admission_policies,
                                 register_admission_policy, serve_async)
 from repro.core.runner import run_bp
 from repro.core.batch import (BatchedPGM, Bucket, RoundsHistory, batch_keys,
                               bucket_key, bucket_pgms, group_ceilings,
                               run_bp_batch, run_bp_many)
-from repro.core.schedulers import (LBP, RBP, RS, RnBP, SCHEDULERS,
-                                   get_scheduler, register_scheduler,
+from repro.core.schedulers import (LBP, RBP, RLX, RLXTree, RS, RnBP,
+                                   SCHEDULERS, get_scheduler,
+                                   list_schedulers, register_scheduler,
                                    scheduler_spec)
+from repro.kernels.ops import list_backends
 from repro.core.serial import SRBPResult, run_srbp, srbp_run
 from repro.core.exact import (brute_force_marginals, kl_divergence,
                               ve_marginals)
@@ -56,10 +66,12 @@ __all__ = [
     "ADMISSION_POLICIES", "AdmissionPolicy", "FIFOAdmission",
     "ResidualAdmission", "WindowedAdmission", "get_admission_policy",
     "register_admission_policy",
+    "Registry", "list_schedulers", "list_backends",
+    "list_admission_policies",
     "BatchedPGM", "Bucket", "RoundsHistory", "batch_keys", "bucket_key",
     "bucket_pgms", "group_ceilings",
-    "LBP", "RBP", "RS", "RnBP", "SCHEDULERS", "get_scheduler",
-    "register_scheduler", "scheduler_spec",
+    "LBP", "RBP", "RS", "RnBP", "RLX", "RLXTree", "SCHEDULERS",
+    "get_scheduler", "register_scheduler", "scheduler_spec",
     "SRBPResult", "srbp_run",
     "brute_force_marginals", "kl_divergence", "ve_marginals", "messages",
     # deprecated wrappers

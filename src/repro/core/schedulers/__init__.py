@@ -1,18 +1,22 @@
-"""Message schedulings studied in the paper (Table IV).
+"""Message schedulings studied in the paper (Table IV) plus the relaxed
+priority family (arxiv 2002.11505 / 1206.5291).
 
-| Algorithm  | Frontier selection            | Module   | Spec     |
-|------------|-------------------------------|----------|----------|
-| LBP        | all messages                  | lbp.py   | "lbp"    |
-| RBP        | sort-and-select top-k (edges) | rbp.py   | "rbp"    |
-| RS         | top-k vertices + depth-h splash | rs.py  | "rs"     |
-| RnBP       | eps-filter + randomized p     | rnbp.py  | "rnbp"   | (paper's contribution)
+| Algorithm  | Frontier selection              | Module     | Spec      |
+|------------|---------------------------------|------------|-----------|
+| LBP        | all messages                    | lbp.py     | "lbp"     |
+| RBP        | sort-and-select top-k (edges)   | rbp.py     | "rbp"     |
+| RS         | top-k vertices + depth-h splash | rs.py      | "rs"      |
+| RnBP       | eps-filter + randomized p       | rnbp.py    | "rnbp"    | (paper's contribution)
+| RLX        | per-queue top-k, sampled queues | rlx.py     | "rlx"     |
+| RLXTree    | rlx with dst-ordered queues     | rlxtree.py | "rlxtree" |
 
 Schedulers are interchangeable priority policies behind one inference loop
 (the framing of Aksenov et al. and Elidan et al.), so they are addressable
-by *string spec* through a registry: ``get_scheduler("rnbp", low_p=0.4)``.
-This keeps ``repro.core.engine.BPConfig`` serializable end-to-end -- a
-config that crossed a process boundary as JSON reconstructs the same
-scheduler.
+by *string spec* through a :class:`repro.core.registry.Registry`:
+``get_scheduler("rnbp", low_p=0.4)``. This keeps
+``repro.core.engine.BPConfig`` serializable end-to-end -- a config that
+crossed a process boundary as JSON reconstructs the same scheduler.
+``list_schedulers()`` is the sorted name listing (CLI ``choices=`` feed).
 
 Serial RBP (the paper's SRBP baseline, Boost Fibonacci-heap) lives in
 ``repro.core.serial`` as a host-side numpy implementation; it is not a
@@ -22,50 +26,54 @@ Serial RBP (the paper's SRBP baseline, Boost Fibonacci-heap) lives in
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Type
+from typing import Callable, List, Type
 
+from repro.core.registry import Registry
 from repro.core.schedulers.base import Scheduler
 from repro.core.schedulers.lbp import LBP
 from repro.core.schedulers.rbp import RBP
-from repro.core.schedulers.rs import RS
+from repro.core.schedulers.rlx import RLX
+from repro.core.schedulers.rlxtree import RLXTree
 from repro.core.schedulers.rnbp import RnBP
+from repro.core.schedulers.rs import RS
 
 #: name -> Scheduler class. Names are the canonical serialized form.
-SCHEDULERS: Dict[str, Type] = {
+#: A ``Registry`` (dict subclass): plain-dict reads keep working.
+SCHEDULERS: Registry[Type] = Registry("scheduler", {
     "lbp": LBP,
     "rbp": RBP,
     "rs": RS,
     "rnbp": RnBP,
-}
+    "rlx": RLX,
+    "rlxtree": RLXTree,
+})
 
 
-def register_scheduler(name: str) -> Callable[[Type], Type]:
+def register_scheduler(name: str, *,
+                       overwrite: bool = False) -> Callable[[Type], Type]:
     """Class decorator registering a scheduler under ``name`` (lowercased).
 
     The class must satisfy the ``Scheduler`` protocol and be constructible
-    from keyword arguments (so string specs stay serializable)."""
-    key = name.lower()
+    from keyword arguments (so string specs stay serializable). Duplicate
+    names raise ``ValueError`` unless ``overwrite=True``."""
+    return SCHEDULERS.register(name, overwrite=overwrite)
 
-    def deco(cls: Type) -> Type:
-        SCHEDULERS[key] = cls
-        return cls
 
-    return deco
+def list_schedulers() -> List[str]:
+    """Sorted registered scheduler names (the valid ``BPConfig.scheduler``
+    string specs, minus the special-cased host-serial ``"srbp"``)."""
+    return SCHEDULERS.names()
 
 
 def get_scheduler(spec, **kwargs) -> Scheduler:
     """Resolve a scheduler spec: a registry name (+ constructor kwargs) or an
     already-built ``Scheduler`` instance (kwargs must then be empty)."""
     if isinstance(spec, str):
-        key = spec.lower()
-        if key == "srbp":
+        if spec.lower() == "srbp":
             raise ValueError(
                 "'srbp' is the host-serial baseline, not a frontier "
                 "scheduler; use BPEngine(BPConfig(scheduler='srbp')).run()")
-        if key not in SCHEDULERS:
-            raise KeyError(f"unknown scheduler {spec!r}; registered: "
-                           f"{sorted(SCHEDULERS)}")
-        return SCHEDULERS[key](**kwargs)
+        return SCHEDULERS.lookup(spec)(**kwargs)
     if kwargs:
         raise ValueError("scheduler kwargs only apply to string specs, got "
                          f"instance {type(spec).__name__} plus {kwargs}")
@@ -82,5 +90,6 @@ def scheduler_spec(sched: Scheduler):
     raise KeyError(f"{type(sched).__name__} is not a registered scheduler")
 
 
-__all__ = ["Scheduler", "LBP", "RBP", "RS", "RnBP", "SCHEDULERS",
-           "get_scheduler", "register_scheduler", "scheduler_spec"]
+__all__ = ["Scheduler", "LBP", "RBP", "RS", "RnBP", "RLX", "RLXTree",
+           "SCHEDULERS", "get_scheduler", "register_scheduler",
+           "list_schedulers", "scheduler_spec"]

@@ -72,12 +72,13 @@ from repro.core.batch import (BatchedPGM, RoundsHistory, _pow2_ceil,
 from repro.core.engine import (BPEngine, BPResult, BPState, ServeStats,
                                _load_slot)
 from repro.core.graph import NEG_INF, PGM, pad_pgm_arrays
+from repro.core.registry import Registry
 
 __all__ = ["ADMISSION_POLICIES", "AdmissionPolicy", "AsyncServeResult",
            "AsyncServeStats", "FIFOAdmission", "RequestRecord",
            "ResidualAdmission", "ServingPipeline", "WindowedAdmission",
-           "get_admission_policy", "register_admission_policy",
-           "serve_async"]
+           "get_admission_policy", "list_admission_policies",
+           "register_admission_policy", "serve_async"]
 
 
 # --------------------------------------------------------------- records --
@@ -541,27 +542,29 @@ class WindowedAdmission(AdmissionPolicy):
 
 
 #: name -> AdmissionPolicy class; names are the canonical serialized form
-#: (``BPConfig(admission=...)`` / ``serve_async(admission=...)``).
-ADMISSION_POLICIES: Dict[str, type] = {
+#: (``BPConfig(admission=...)`` / ``serve_async(admission=...)``). A
+#: ``Registry`` (dict subclass): plain-dict reads keep working.
+ADMISSION_POLICIES: Registry[type] = Registry("admission policy", {
     "fifo": FIFOAdmission,
     "residual": ResidualAdmission,
     "windowed": WindowedAdmission,
-}
+})
 
 
-def register_admission_policy(name: str):
+def register_admission_policy(name: str, *, overwrite: bool = False):
     """Class decorator registering an :class:`AdmissionPolicy` subclass
     under ``name`` (lowercased), making it addressable by string spec --
     ``serve_async(..., admission="mine")`` -- exactly like
     ``register_scheduler`` does for schedulers. The class must be
-    constructible from keyword arguments so specs stay serializable."""
-    key = name.lower()
+    constructible from keyword arguments so specs stay serializable.
+    Duplicate names raise ``ValueError`` unless ``overwrite=True``."""
+    return ADMISSION_POLICIES.register(name, overwrite=overwrite)
 
-    def deco(cls: type) -> type:
-        ADMISSION_POLICIES[key] = cls
-        return cls
 
-    return deco
+def list_admission_policies() -> List[str]:
+    """Sorted registered admission-policy names (valid
+    ``BPConfig.admission`` / ``serve_async(admission=...)`` specs)."""
+    return ADMISSION_POLICIES.names()
 
 
 def get_admission_policy(spec, **kwargs) -> AdmissionPolicy:
@@ -570,11 +573,7 @@ def get_admission_policy(spec, **kwargs) -> AdmissionPolicy:
     must then be empty). The string form is what ``BPConfig.admission``
     serializes."""
     if isinstance(spec, str):
-        key = spec.lower()
-        if key not in ADMISSION_POLICIES:
-            raise KeyError(f"unknown admission policy {spec!r}; registered: "
-                           f"{sorted(ADMISSION_POLICIES)}")
-        return ADMISSION_POLICIES[key](**kwargs)
+        return ADMISSION_POLICIES.lookup(spec)(**kwargs)
     if kwargs:
         raise ValueError("admission kwargs only apply to string specs, got "
                          f"instance {type(spec).__name__} plus {kwargs}")

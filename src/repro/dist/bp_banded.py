@@ -26,9 +26,22 @@ add the same values in the same order as the single-device reference --
 banded LBP reproduces the reference trajectory (and therefore the round
 count) exactly. Stochastic schedulers (RnBP) use *per-shard* RNG streams
 (``fold_in(rng, shard)``); they converge to the same quality but not the
-same trajectory. Sort-based schedulers (RBP/RS) need a global top-k per
-round, which defeats neighbor-only communication -- they raise
-``NotImplementedError`` here; use ``run_bp_sharded`` for them.
+same trajectory.
+
+Priority scheduling: *exact* sort-based schedulers (RBP/RS) need a global
+top-k per round, which defeats neighbor-only communication -- they raise
+the registry-style unsupported error below; use ``run_bp_sharded`` for
+them. The *relaxed* priority family (RLX/RLXTree) is supported natively:
+band slots are already in stable destination order, so contiguous
+band-local queues are simultaneously storage-contiguous (rlx's partition)
+and destination-ordered (rlxtree's structural partition) -- the two
+coincide here, and per-queue top-k selection stays entirely shard-local
+(per-shard RNG streams like RnBP, each shard force-including its own
+max-residual queue), preserving the banded invariant that the only global
+collective is the scalar unconverged count. ``BANDED_SCHEDULERS`` names
+the supported subset; unsupported schedulers raise ``NotImplementedError``
+with the uniform registry message format ("unknown banded scheduler ...;
+registered: [...]").
 """
 
 from __future__ import annotations
@@ -44,7 +57,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import messages as M
 from repro.core.graph import NEG_INF, PGM
-from repro.core.schedulers import LBP, RnBP, get_scheduler
+from repro.core.registry import Registry
+from repro.core.schedulers import LBP, RLX, RLXTree, RnBP, get_scheduler
+from repro.core.schedulers.rlx import queue_count, relaxed_frontier
+
+#: The scheduler subset the banded runner supports (see module docstring:
+#: exact sort-based priorities need a global top-k and are excluded).
+#: Same Registry class as ``SCHEDULERS`` so the unsupported-scheduler
+#: error carries the uniform "unknown X ...; registered: [...]" format.
+BANDED_SCHEDULERS = Registry("banded scheduler", {
+    "lbp": LBP,
+    "rlx": RLX,
+    "rlxtree": RLXTree,
+    "rnbp": RnBP,
+})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,15 +222,19 @@ def run_bp_banded(part: BandedPartition, scheduler, mesh: Mesh,
     sweeps and ``done`` the () bool convergence flag -- True iff every real
     edge's residual fell below ``eps`` within ``max_rounds``. ``scheduler``
     may be ``LBP()`` (round-exact vs the single-device reference, see module
-    docstring), ``RnBP(...)`` (per-shard RNG streams), or a registry spec
-    string for either; sort-based schedulers raise ``NotImplementedError``.
+    docstring), ``RnBP(...)`` / ``RLX(...)`` / ``RLXTree(...)`` (per-shard
+    RNG streams), or a registry spec string for any of them; exact
+    sort-based schedulers raise ``NotImplementedError`` carrying the
+    uniform registry message that names the supported subset
+    (``BANDED_SCHEDULERS``).
     """
     if isinstance(scheduler, str):
         scheduler = get_scheduler(scheduler)
-    if not isinstance(scheduler, (LBP, RnBP)):
+    if not isinstance(scheduler, tuple(BANDED_SCHEDULERS.values())):
         raise NotImplementedError(
-            f"{type(scheduler).__name__} needs a global sort per round; "
-            "banded halo exchange supports LBP/RnBP -- use run_bp_sharded")
+            f"{type(scheduler).__name__} needs a global sort per round "
+            "(use run_bp_sharded); "
+            + BANDED_SCHEDULERS.unknown(type(scheduler).__name__.lower()))
     if scheduler.inner_sweeps != 1:
         raise NotImplementedError(
             f"inner_sweeps={scheduler.inner_sweeps}: the banded loop runs "
@@ -237,6 +267,17 @@ def run_bp_banded(part: BandedPartition, scheduler, mesh: Mesh,
     ext_mask = jnp.asarray(ext3(mask_np, False))               # (n, 3L)
 
     rnbp = isinstance(scheduler, RnBP)
+    relaxed = isinstance(scheduler, (RLX, RLXTree))
+    if relaxed:
+        # Band slots are already in stable destination order, so contiguous
+        # band-local queues realize both rlx (storage-contiguous) and
+        # rlxtree (dst-ordered) partitions at once. `queues` is the global
+        # relaxation degree: each of the n shards hosts its share, and the
+        # per-queue k divides the global frontier budget p*|E| over all
+        # queues. Selection is entirely shard-local.
+        q_band = queue_count(L, max(1, scheduler.queues // n))
+        k_band = min(max(1, int(round(
+            scheduler.p * e_real / (q_band * n)))), L // q_band)
 
     def body_shard(src, dst, rev, emask, psi_e, xdst, xmask, psi_v, smask,
                    key_data):
@@ -279,6 +320,15 @@ def run_bp_banded(part: BandedPartition, scheduler, mesh: Mesh,
                 keep = jax.random.uniform(sel_key, resid.shape) < p
                 frontier = (resid >= eps) & emask & keep
                 old_count = new_count
+            elif relaxed:
+                # Per-queue top-k of a sampled queue subset, shard-local;
+                # each shard force-includes its own max-residual queue
+                # (relaxed_frontier), so the shard holding the global max
+                # always commits it -- no livelock, no cross-shard sort.
+                res2 = jnp.where(emask, resid, 0.0).reshape(
+                    q_band, L // q_band)
+                frontier = relaxed_frontier(
+                    res2, k_band, scheduler.sample, sel_key).reshape(L)
             else:
                 frontier = emask
             newly_done = unconverged == 0
@@ -320,4 +370,5 @@ def run_bp_banded(part: BandedPartition, scheduler, mesh: Mesh,
     return runner(rng)
 
 
-__all__ = ["BandedPartition", "partition_banded", "run_bp_banded"]
+__all__ = ["BANDED_SCHEDULERS", "BandedPartition", "partition_banded",
+           "run_bp_banded"]

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import messages as M
 from repro.core.graph import PGM
+from repro.core.registry import Registry
 from repro.kernels.message_update import fused_update_t, pick_block_edges
 
 
@@ -110,7 +111,9 @@ def _make_sharded_update(**kwargs):
     return make_sharded_update(**kwargs)
 
 
-UPDATE_BACKENDS = {
+#: name -> zero/kwarg factory returning an ``update_fn``. A ``Registry``
+#: (dict subclass): plain-dict reads keep working.
+UPDATE_BACKENDS = Registry("update backend", {
     "ref": lambda: M.ref_update,
     "pallas": make_pallas_update,
     # Multi-device shard_map update over the edge axis (repro.dist). With
@@ -120,19 +123,28 @@ UPDATE_BACKENDS = {
     # 128, so power-of-two meshes <= 64 always work); run_bp_sharded
     # re-pads single graphs that don't.
     "sharded": _make_sharded_update,
-}
+})
 
-BATCH_UPDATE_BACKENDS = {
+BATCH_UPDATE_BACKENDS = Registry("batched update backend", {
     "pallas": make_pallas_update_batch,
-}
+})
+
+
+def register_update_backend(name: str, *, batched: bool = False,
+                            overwrite: bool = False):
+    """Decorator registering an update-backend factory under ``name``
+    (lowercased). Duplicates raise ``ValueError`` unless ``overwrite=True``."""
+    registry = BATCH_UPDATE_BACKENDS if batched else UPDATE_BACKENDS
+    return registry.register(name, overwrite=overwrite)
+
+
+def list_backends(*, batched: bool = False):
+    """Sorted registered backend names (valid ``BPConfig.backend`` specs)."""
+    return (BATCH_UPDATE_BACKENDS if batched else UPDATE_BACKENDS).names()
 
 
 def get_update_fn(name: str, *, batched: bool = False, **kwargs):
     """Resolve a backend name to an update callable (see registries above).
     ``kwargs`` (e.g. ``interpret=``) pass through to the factory."""
     registry = BATCH_UPDATE_BACKENDS if batched else UPDATE_BACKENDS
-    if name not in registry:
-        kind = "batched " if batched else ""
-        raise KeyError(f"unknown {kind}update backend {name!r}; "
-                       f"registered: {sorted(registry)}")
-    return registry[name](**kwargs)
+    return registry.lookup(name)(**kwargs)

@@ -48,7 +48,8 @@ def _code_blocks(md_path):
 
 @pytest.mark.parametrize("md,min_blocks", [("engine.md", 3),
                                            ("serving.md", 3),
-                                           ("admission.md", 3)])
+                                           ("admission.md", 3),
+                                           ("schedulers.md", 2)])
 def test_md_code_blocks_execute(md, min_blocks):
     blocks = _code_blocks(DOCS / md)
     assert len(blocks) >= min_blocks, f"{md} lost its executable examples"

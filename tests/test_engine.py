@@ -19,8 +19,8 @@ import numpy as np
 import pytest
 
 from repro.core import (BPConfig, BPEngine, BatchedPGM, LBP, RBP, RS, RnBP,
-                        batch_keys, get_scheduler, run_bp, run_bp_batch,
-                        run_bp_many, run_srbp, scheduler_spec)
+                        batch_keys, get_scheduler, list_schedulers, run_bp,
+                        run_bp_batch, run_bp_many, run_srbp, scheduler_spec)
 from repro.pgm import chain_graph, ising_grid
 
 SCHEDULER_SPECS = [
@@ -28,6 +28,8 @@ SCHEDULER_SPECS = [
     ("rbp", {"p": 1.0 / 16}),
     ("rs", {"p": 0.05}),
     ("rnbp", {"low_p": 0.4, "high_p": 0.9}),
+    ("rlx", {"queues": 8, "sample": 0.5, "p": 1.0 / 32}),
+    ("rlxtree", {"queues": 8, "sample": 0.5, "p": 1.0 / 32}),
 ]
 IDS = [s for s, _ in SCHEDULER_SPECS]
 
@@ -74,6 +76,57 @@ class TestConfigAndRegistry:
             BPConfig(damping=1.0)
         with pytest.raises(ValueError):
             BPConfig(chunk_rounds=0)
+
+    def test_spec_roundtrip_every_registered_scheduler(self):
+        # scheduler_spec(get_scheduler(name, **kw)) is the identity for
+        # every registered name, including the relaxed family.
+        kw_by_name = dict(SCHEDULER_SPECS)
+        for name in list_schedulers():
+            kw = kw_by_name.get(name, {})
+            sched = get_scheduler(name, **kw)
+            got_name, got_kw = scheduler_spec(sched)
+            assert got_name == name
+            assert get_scheduler(got_name, **got_kw) == sched
+            for k, v in kw.items():
+                assert got_kw[k] == v
+
+    def test_duplicate_registration_raises(self):
+        from repro.core import SCHEDULERS, register_scheduler
+        with pytest.raises(ValueError, match="duplicate scheduler"):
+            register_scheduler("rlx")(type(get_scheduler("rlx")))
+        # deliberate replacement works and restores cleanly
+        cls = SCHEDULERS["rlx"]
+        assert register_scheduler("rlx", overwrite=True)(cls) is cls
+
+    def test_registries_share_list_and_error_format(self):
+        import re
+        from repro.core import (get_admission_policy, list_admission_policies,
+                                list_backends)
+        from repro.kernels.ops import get_update_fn
+        assert "rlx" in list_schedulers() and "rlxtree" in list_schedulers()
+        assert "sharded" in list_backends()
+        assert "pallas" in list_backends(batched=True)
+        assert "fifo" in list_admission_policies()
+        fmt = r"unknown [\w ]+ 'nope'; registered: \["
+        for fn in (lambda: get_scheduler("nope"),
+                   lambda: get_update_fn("nope"),
+                   lambda: get_update_fn("nope", batched=True),
+                   lambda: get_admission_policy("nope")):
+            with pytest.raises(KeyError) as ei:
+                fn()
+            assert re.search(fmt, str(ei.value)), str(ei.value)
+
+    def test_config_carries_relaxed_kwargs_bitwise(self):
+        import json
+        kw = {"queues": 16, "sample": 0.3, "p": 1.0 / 3.0}
+        for name in ("rlx", "rlxtree"):
+            cfg = BPConfig(scheduler=name, scheduler_kwargs=kw)
+            rt = BPConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+            assert rt == cfg
+            sched = rt.make_scheduler()
+            assert sched.queues == 16
+            assert sched.sample == 0.3
+            assert sched.p == 1.0 / 3.0  # exact float, not approx
 
 
 class TestWrapperParity:

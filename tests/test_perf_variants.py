@@ -105,6 +105,51 @@ print("OK")
         with pytest.raises(AssertionError):
             partition_banded(pgm, 32)
 
+    def test_banded_relaxed_converges_subprocess(self):
+        # rlx/rlxtree are first-class on the banded path: shard-local
+        # per-queue top-k, no global sort. Same 8-fake-device subprocess
+        # pattern as the LBP parity test above.
+        code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.core import RLX, RLXTree
+from repro.pgm import ising_grid_fast
+from repro.dist.bp_banded import partition_banded, run_bp_banded
+
+mesh = jax.make_mesh((8,), ("bp",))
+pgm = ising_grid_fast(24, 2.5, seed=0)
+part = partition_banded(pgm, 8)
+for sched in [RLX(), RLXTree()]:
+    logm, rounds, done = run_bp_banded(part, sched, mesh, jax.random.key(0),
+                                       eps=1e-4, max_rounds=10000)
+    assert bool(done), f"banded {type(sched).__name__} did not converge"
+print("OK")
+"""
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout
+
+    def test_banded_unsupported_scheduler_error_lists_rlx(self):
+        # exact sort-based schedulers are rejected with the uniform
+        # registry-style message that names the supported subset
+        from repro.core import RBP, RS
+        from repro.dist.bp_banded import partition_banded, run_bp_banded
+        from repro.pgm import ising_grid_fast
+        mesh = jax.make_mesh((1,), ("bp",))
+        part = partition_banded(ising_grid_fast(6, 1.0, seed=0), 1)
+        for sched in (RBP(), RS()):
+            with pytest.raises(NotImplementedError) as ei:
+                run_bp_banded(part, sched, mesh, jax.random.key(0))
+            msg = str(ei.value)
+            assert "unknown banded scheduler" in msg
+            assert "'rlx'" in msg and "'rlxtree'" in msg
+            assert "'lbp'" in msg and "'rnbp'" in msg
+
 
 class TestFSDPShardings:
     def test_fsdp_param_rules(self):

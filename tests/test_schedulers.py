@@ -24,7 +24,7 @@ except ImportError:                       # degrade: property tests skip
     class st:  # noqa: N801 - stand-in namespace, never executed
         integers = floats = staticmethod(lambda *a, **k: None)
 
-from repro.core import LBP, RBP, RS, RnBP
+from repro.core import LBP, RBP, RLX, RLXTree, RS, RnBP
 from repro.core import messages as M
 from repro.pgm import ising_grid
 
@@ -82,6 +82,57 @@ class TestFrontiers:
         assert np.all(rr[fm] >= eps)           # filter 1 enforced
         em = np.asarray(pgm.edge_mask)
         assert not np.any(fm & ~em)            # padding never selected
+
+    def test_rlx_per_queue_topk(self):
+        pgm, r = _setup()
+        q, p = 8, 1 / 16
+        sched = RLX(queues=q, sample=1.0, p=p)  # sample=1: every queue kept
+        f, _ = sched.select(pgm, r, 1e-3, jax.random.key(0), sched.init(pgm),
+                            jnp.int32(9))
+        rr = np.asarray(jnp.where(pgm.edge_mask, r, 0.0)).reshape(q, -1)
+        fm = np.asarray(f).reshape(q, -1)
+        em = np.asarray(pgm.edge_mask)
+        assert not np.any(np.asarray(f) & ~em)  # padding never selected
+        k = max(1, round(p * pgm.n_real_edges / q))
+        for qi in range(q):
+            # threshold semantics per queue: >= k selected (ties), and the
+            # selected residuals dominate this queue's unselected ones.
+            assert fm[qi].sum() >= min(k, (rr[qi] > 0).sum())
+            if fm[qi].any() and (~fm[qi]).any():
+                assert rr[qi][fm[qi]].min() >= rr[qi][~fm[qi]].max() - 1e-6
+
+    def test_rlx_sampling_is_monotone_and_never_empty(self):
+        pgm, r = _setup()
+        rng = jax.random.key(7)
+        full, _ = RLX(sample=1.0).select(pgm, r, 1e-3, rng, (), jnp.int32(9))
+        half, _ = RLX(sample=0.5).select(pgm, r, 1e-3, rng, (), jnp.int32(9))
+        tiny, _ = RLX(sample=1e-6).select(pgm, r, 1e-3, rng, (), jnp.int32(9))
+        # same rng => same uniform draws => kept-queue sets nest
+        assert not np.any(np.asarray(half) & ~np.asarray(full))
+        assert not np.any(np.asarray(tiny) & ~np.asarray(half))
+        # the queue holding the max residual is always kept: the globally
+        # hottest edge is in the frontier at any sample rate (no livelock)
+        hot = int(np.argmax(np.asarray(jnp.where(pgm.edge_mask, r, 0.0))))
+        for f in (full, half, tiny):
+            assert int(np.asarray(f).sum()) > 0
+            assert bool(np.asarray(tiny)[hot])
+
+    def test_rlxtree_queues_are_dst_contiguous(self):
+        pgm, r = _setup()
+        sched = RLXTree(queues=8, sample=1.0, p=1 / 16)
+        order = np.asarray(sched.init(pgm))
+        em = np.asarray(pgm.edge_mask)
+        dst_sorted = np.asarray(pgm.edge_dst)[order]
+        n_real = int(em.sum())
+        # state perm puts real edges first, in nondecreasing dst order:
+        # contiguous queues == contiguous destination neighborhoods
+        assert np.all(em[order][:n_real])
+        assert np.all(np.diff(dst_sorted[:n_real]) >= 0)
+        f, state = sched.select(pgm, r, 1e-3, jax.random.key(0),
+                                sched.init(pgm), jnp.int32(9))
+        assert np.array_equal(np.asarray(state), order)  # perm is carried
+        assert int(np.asarray(f).sum()) > 0
+        assert not np.any(np.asarray(f) & ~em)
 
 
 class TestRnBPController:

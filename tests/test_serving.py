@@ -284,6 +284,23 @@ class TestAdmissionPolicies:
         for got, want in zip(other.results, fifo.results):
             _assert_bitwise(got, want)
 
+    def test_policies_invariant_for_relaxed_scheduler(self):
+        # Same invariance with the relaxed priority family: rlx's queue
+        # sampling draws from the per-request fold_in stream, so admission
+        # order must stay bitwise-invisible for it too.
+        stream = [ising_grid(6, 2.0, seed=1), chain_graph(40, seed=2),
+                  ising_grid(7, 2.0, seed=3)]
+        engine = BPEngine(BPConfig(scheduler="rlx",
+                                   scheduler_kwargs={"p": 1 / 32},
+                                   eps=1e-4, max_rounds=600, history=False))
+        kw = dict(max_batch=2, chunk_rounds=32, slots=1, prefetch=None)
+        fifo = serve_async(engine, stream, jax.random.key(0),
+                           admission="fifo", **kw)
+        resid = serve_async(engine, stream, jax.random.key(0),
+                            admission="residual", **kw)
+        for got, want in zip(resid.results, fifo.results):
+            _assert_bitwise(got, want)
+
     def test_residual_cobatching_cuts_wasted_sweeps(self):
         """Acceptance: residual admission <= FIFO wasted sweeps at equal
         slots on the straggler mix, with identical useful work."""

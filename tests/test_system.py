@@ -54,6 +54,47 @@ print("OK")
         assert out.returncode == 0, out.stderr[-2000:]
         assert "OK" in out.stdout
 
+    def test_sharded_relaxed_scheduler_converges(self):
+        """rlx/rlxtree under the 8-device sharded backend: converge to the
+        single-device beliefs, and chunked resume stays bitwise (the relaxed
+        per-queue selection must survive the shard_map backend)."""
+        code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import LBP, run_bp
+from repro.pgm import ising_grid
+from repro.dist import make_bp_mesh, make_sharded_engine, shard_pgm
+
+pgm = ising_grid(16, 2.5, seed=0)
+mesh = make_bp_mesh()
+ref = run_bp(pgm, LBP(), jax.random.key(0), eps=1e-6, max_rounds=4000)
+assert bool(ref.converged)
+spgm = shard_pgm(pgm, mesh)
+for name in ["rlx", "rlxtree"]:
+    engine = make_sharded_engine(name, mesh, eps=1e-6, max_rounds=20000)
+    mono = engine.run(spgm, jax.random.key(7))
+    assert bool(mono.converged), name
+    d = float(jnp.max(jnp.abs(jnp.where(pgm.state_mask,
+                                        mono.beliefs - ref.beliefs, 0.0))))
+    assert d < 5e-3, (name, d)
+    state = engine.init(spgm, jax.random.key(7))
+    while not engine.finished(state):
+        state = engine.step(state, chunk_rounds=37)
+    chunked = engine.result(state)
+    assert int(mono.rounds) == int(chunked.rounds), name
+    np.testing.assert_array_equal(np.asarray(mono.logm),
+                                  np.asarray(chunked.logm))
+print("OK")
+"""
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout
+
     def test_sharded_chunked_resume_bitwise(self):
         """Chunked BPEngine.step under the 8-device mesh must match a
         monolithic sharded run bit-for-bit -- the engine's resume guarantee

@@ -13,7 +13,7 @@ import time
 
 from benchmarks import (bench_batch, bench_correctness, bench_dist,
                         bench_greedy, bench_kernel, bench_protein,
-                        bench_rnbp, bench_tradeoff)
+                        bench_rnbp, bench_router, bench_tradeoff)
 
 SUITES = {
     "fig2_tradeoff": bench_tradeoff,
@@ -24,6 +24,7 @@ SUITES = {
     "kernel": bench_kernel,
     "batch": bench_batch,
     "dist": bench_dist,
+    "router": bench_router,
 }
 
 

@@ -30,15 +30,24 @@ Knobs:
   --window-ms      windowed policy's admission window
   --ingest-threads feeder threads pulling the stream behind a bounded
                    queue (0 = pull on the serving thread)
+  --replicas       N > 1 serves through the router tier (repro.serve):
+                   N pipelines on their own threads behind one front-end
+  --routing        routing policy for the router tier: round_robin |
+                   least_loaded | kind_affinity (docs/router.md)
+  --steal          cross-replica work stealing: a drained replica pulls
+                   a batch from the deepest peer's inbox
   --scheduler      message scheduler (rnbp default); --backend picks the
-                   update backend -- both flags (and --policy) take their
-                   choices from the live registries via list_schedulers /
-                   list_backends / list_admission_policies, so --help
-                   always shows exactly what is registered
+                   update backend -- these flags (and --policy/--routing)
+                   take their choices from the live registries via
+                   list_schedulers / list_backends /
+                   list_admission_policies / list_routing_policies, so
+                   --help always shows exactly what is registered
 
 Run:  PYTHONPATH=src python examples/bp_serving.py [--async] [--requests 12]
       PYTHONPATH=src python examples/bp_serving.py --async \
           --policy residual --ingest-threads 2
+      PYTHONPATH=src python examples/bp_serving.py \
+          --replicas 2 --routing least_loaded --steal
 """
 
 import argparse
@@ -50,6 +59,7 @@ import numpy as np
 from repro.core import (BPConfig, BPEngine, list_admission_policies,
                         list_backends, list_schedulers, serve_async)
 from repro.pgm import chain_graph, ising_grid, protein_like_graph
+from repro.serve import list_routing_policies, serve_routed
 
 
 def request_stream(n):
@@ -95,6 +105,15 @@ def main():
     ap.add_argument("--ingest-threads", type=int, default=0,
                     help="feeder threads pulling the request stream "
                          "(0 = pull on the serving thread)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas behind the router tier "
+                         "(repro.serve); > 1 implies the async pipeline")
+    ap.add_argument("--routing", default="round_robin",
+                    choices=list_routing_policies(),
+                    help="router placement policy (docs/router.md)")
+    ap.add_argument("--steal", action="store_true",
+                    help="cross-replica work stealing when a replica's "
+                         "pending work drains below its low watermark")
     args = ap.parse_args()
 
     sched_kwargs = ({"low_p": 0.4, "high_p": 0.9}  # paper's protein run
@@ -113,14 +132,23 @@ def main():
               admission_kwargs=admission_kwargs,
               ingest_threads=args.ingest_threads)
 
-    if args.async_mode:
+    def online():
         # Online path: the generator is consumed lazily; each request is
         # padded + device_put the moment it is pulled (bucket_shape
         # ceilings), overlapped with the in-flight device chunks.
-        def online():
-            for rid, kind, pgm in request_stream(args.requests):
-                kinds[rid] = kind
-                yield pgm
+        for rid, kind, pgm in request_stream(args.requests):
+            kinds[rid] = kind
+            yield pgm
+
+    if args.replicas > 1:
+        print(f"{args.requests} requests (router tier: {args.replicas} "
+              f"replicas, routing={args.routing}, steal={args.steal}, "
+              f"policy={args.policy})", flush=True)
+        rep = serve_routed(engine, online(), jax.random.key(0),
+                           replicas=args.replicas, routing=args.routing,
+                           steal=args.steal, growth=args.growth, slots=2,
+                           prefetch=2 * args.max_batch, **kw)
+    elif args.async_mode:
         print(f"{args.requests} requests (async pipeline, "
               f"width={args.max_batch}, policy={args.policy}, "
               f"ingest_threads={args.ingest_threads})", flush=True)
@@ -149,10 +177,12 @@ def main():
         done += ok
         failed += not ok
         marg = np.exp(np.asarray(rec.result.beliefs[0]))
+        where = (f" r{rec.replica}{'*' if rec.stolen else ' '}"
+                 if args.replicas > 1 else "")
         print(f"req {rid:3d} {kinds[rid]:14s} "
               f"{'ok  ' if ok else 'FAIL'} rounds={int(rec.result.rounds):5d} "
               f"latency={rec.latency_s * 1e3:8.1f}ms "
-              f"(queue {rec.queue_s * 1e3:7.1f}ms) "
+              f"(queue {rec.queue_s * 1e3:7.1f}ms){where} "
               f"P(x0)={np.round(marg[:2], 3)}", flush=True)
 
     s = rep.stats
@@ -163,20 +193,29 @@ def main():
     # buckets), the service time is what the device actually cost.
     adm = rep.latency_percentiles((50, 95, 99), field="admission")
     svc = rep.latency_percentiles((50, 95, 99), field="service")
+    policy = (f"routing={s.policy}" if args.replicas > 1
+              else f"policy={s.policy}")
     print(f"\nserved {done}/{args.requests} converged "
           f"({failed} unconverged) in {wall:.1f}s "
-          f"({args.requests / wall:.1f} graphs/s, policy={s.policy})")
+          f"({args.requests / wall:.1f} graphs/s, {policy})")
     print(f"latency ms:        p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
           f"p99={pct['p99']:.1f}")
     print(f"admission-wait ms: p50={adm['p50']:.1f} p95={adm['p95']:.1f} "
           f"p99={adm['p99']:.1f}")
     print(f"service ms:        p50={svc['p50']:.1f} p95={svc['p95']:.1f} "
           f"p99={svc['p99']:.1f}")
-    print(f"chunks={s.chunks} evacuated={s.evacuated} "
-          f"backfilled={s.backfilled} compactions={s.compactions} "
-          f"admission_holds={s.admission_holds} "
-          f"sweeps: device={s.device_sweeps} "
-          f"useful={s.useful_sweeps} wasted={s.wasted_sweeps}")
+    if args.replicas > 1:
+        # * in the request lines marks work-stolen requests.
+        print(f"replicas={s.replicas} routed={s.routed} "
+              f"steals={s.steals} stolen={s.stolen} "
+              f"sweeps: device={rep.device_sweeps} "
+              f"useful={rep.useful_sweeps} wasted={rep.wasted_sweeps}")
+    else:
+        print(f"chunks={s.chunks} evacuated={s.evacuated} "
+              f"backfilled={s.backfilled} compactions={s.compactions} "
+              f"admission_holds={s.admission_holds} "
+              f"sweeps: device={s.device_sweeps} "
+              f"useful={s.useful_sweeps} wasted={s.wasted_sweeps}")
 
 
 if __name__ == "__main__":

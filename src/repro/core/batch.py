@@ -23,6 +23,7 @@ wrappers around ``BPEngine``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
@@ -274,7 +275,7 @@ def bucket_pgms(pgms: Sequence[PGM], *,
 
 
 class RoundsHistory:
-    """Bounded per-kind history of observed BP round counts.
+    """Bounded, thread-safe per-kind history of observed BP round counts.
 
     A *kind* is any hashable key naming a family of similar requests -- the
     serving layer uses the bucket-shape ceilings (``bucket_shape`` /
@@ -282,7 +283,9 @@ class RoundsHistory:
     history. ``observe(kind, score, rounds)`` records one finished request's
     (admission score, rounds actually run); ``expect(kind, score)`` predicts
     the rounds a new request will need as the observed rounds of the
-    *nearest recorded score* in its kind (``None`` with no history yet).
+    *nearest recorded score* in its kind (``None`` with no history yet);
+    ``mean(kind)`` is the score-free aggregate (mean observed rounds) the
+    router tier uses for effort-in-flight load estimates.
 
     This is the feedback half of Residual-BP-style admission
     (``repro.core.serving.ResidualAdmission``): the cheap residual-at-admit
@@ -290,33 +293,51 @@ class RoundsHistory:
     expected-effort estimate from what actually happened to similar
     requests. ``capacity`` bounds observations kept per kind (a deque, so
     drifting workloads age out), keeping host memory O(kinds) on
-    indefinitely long streams."""
+    indefinitely long streams.
+
+    All methods lock, so one instance may be shared across serving threads
+    -- ``repro.serve`` hands every replica the same history, pooling effort
+    calibration instead of cold-starting it per replica."""
 
     def __init__(self, capacity: int = 64):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._hist: Dict[Any, Deque[Tuple[float, float]]] = {}
+        self._lock = threading.Lock()
 
     def observe(self, kind, score: float, rounds: float) -> None:
         """Record one completed request of ``kind``: its admission score and
         the rounds it actually ran before release."""
-        dq = self._hist.get(kind)
-        if dq is None:
-            dq = self._hist[kind] = deque(maxlen=self.capacity)
-        dq.append((float(score), float(rounds)))
+        with self._lock:
+            dq = self._hist.get(kind)
+            if dq is None:
+                dq = self._hist[kind] = deque(maxlen=self.capacity)
+            dq.append((float(score), float(rounds)))
 
     def expect(self, kind, score: float) -> float | None:
         """Expected rounds for a new request of ``kind`` with admission
         ``score``: the observed rounds of the nearest recorded score, or
         ``None`` when the kind has no history yet."""
-        dq = self._hist.get(kind)
-        if not dq:
-            return None
-        return min(dq, key=lambda sr: abs(sr[0] - float(score)))[1]
+        with self._lock:
+            dq = self._hist.get(kind)
+            if not dq:
+                return None
+            return min(dq, key=lambda sr: abs(sr[0] - float(score)))[1]
+
+    def mean(self, kind) -> float | None:
+        """Mean observed rounds across every record of ``kind`` (``None``
+        with no history yet) -- the score-free effort estimate for callers
+        that have no admission score at hand (request routing)."""
+        with self._lock:
+            dq = self._hist.get(kind)
+            if not dq:
+                return None
+            return sum(r for _, r in dq) / len(dq)
 
     def __len__(self) -> int:
-        return sum(len(dq) for dq in self._hist.values())
+        with self._lock:
+            return sum(len(dq) for dq in self._hist.values())
 
 
 def batch_keys(rng: jax.Array, batch: BatchedPGM | int) -> jax.Array:

@@ -422,12 +422,19 @@ class ResidualAdmission(AdmissionPolicy):
 
     name = "residual"
 
-    def __init__(self, aging: int = 16, history_capacity: int = 64):
+    def __init__(self, aging: int = 16, history_capacity: int = 64,
+                 history: RoundsHistory | None = None):
         super().__init__()
         if aging < 1:
             raise ValueError(f"aging must be >= 1, got {aging}")
         self.aging = aging
-        self.history = RoundsHistory(capacity=history_capacity)
+        # An explicit ``history`` may be shared across pipelines (it locks
+        # internally): the router tier passes every replica one instance so
+        # effort calibration pools instead of cold-starting per replica.
+        # The *policy* stays per-pipeline (bind() enforces that); only the
+        # observation store is shared.
+        self.history = history if history is not None \
+            else RoundsHistory(capacity=history_capacity)
 
     def score(self, pgm: PGM, arrs: Mapping[str, np.ndarray],
               group: _Group) -> float:
@@ -610,8 +617,10 @@ class _IngestFeeder:
         self._live = threads
         self._error: BaseException | None = None
         self._stop = False
-        for _ in range(threads):
-            threading.Thread(target=self._worker, daemon=True).start()
+        self._threads = [threading.Thread(target=self._worker, daemon=True)
+                         for _ in range(threads)]
+        for t in self._threads:
+            t.start()
 
     def _put(self, x) -> bool:
         """Bounded-wait put that aborts once ``close()`` ran (a plain
@@ -642,16 +651,23 @@ class _IngestFeeder:
                 return
         self._put(_FEEDER_DONE)
 
-    def close(self) -> None:
-        """Stop the feeder: workers quit pulling at their next check, and
-        the queue is drained so any worker blocked in ``put`` unblocks
-        (dropping staged-but-unserved items -- the caller abandoned them)."""
+    def close(self, *, join_timeout: float = 2.0) -> None:
+        """Stop the feeder: workers quit pulling at their next check, the
+        queue is drained so any worker blocked in ``put`` unblocks (dropping
+        staged-but-unserved items -- the caller abandoned them), and worker
+        threads are joined. A worker blocked inside the *source's*
+        ``__next__`` cannot be interrupted mid-call; the bounded join leaves
+        such a (daemon) thread behind rather than hanging shutdown -- the
+        general blocking-source caveat."""
         self._stop = True
         while True:
             try:
                 self._q.get_nowait()
             except _queue.Empty:
-                return
+                break
+        deadline = time.perf_counter() + max(0.0, join_timeout)
+        for t in self._threads:
+            t.join(timeout=max(0.0, deadline - time.perf_counter()))
 
     def get(self, block: bool):
         """Next ``(auto_rid, item, t_pull)``; ``None`` when nothing is
@@ -707,6 +723,13 @@ class ServingPipeline:
     stochastic-scheduler trajectories, the caveat shared with ``run_many``.
     Without ``ingest_threads`` the stream is pulled on the serving thread:
     a source that blocks in ``__next__`` delays servicing.
+
+    Lifecycle: a pipeline is also a context manager -- ``with
+    ServingPipeline(...) as pipe`` guarantees ``close()`` on exit, which
+    stops and joins any live ingest feeder threads (an abandoned ``serve``
+    generator already closes its own feeder, but only once its ``finally``
+    runs; owners that must not leak threads call ``close()`` explicitly --
+    the router tier's replica teardown does).
     """
 
     def __init__(self, engine: BPEngine, rng: jax.Array, *,
@@ -761,6 +784,8 @@ class ServingPipeline:
         # request (long-lived streams must not grow host memory).
         self._explicit_rids = False
         self._seen_rids: set[int] = set()
+        self._feeder: _IngestFeeder | None = None
+        self._closed = False
 
     # -- staging (host padding + device_put prefetch) ----------------------
 
@@ -979,11 +1004,13 @@ class ServingPipeline:
         source), (4) sync + service each slot, yielding released results.
         Terminates when the stream is exhausted and every admitted graph
         has been released."""
+        if self._closed:
+            raise ValueError("ServingPipeline is closed")
         it = iter(stream)
         if self.ingest_threads:
             bound = self.ingest_queue or max(self.prefetch or 8,
                                              2 * self.ingest_threads)
-            it = _IngestFeeder(it, self.ingest_threads, bound)
+            it = self._feeder = _IngestFeeder(it, self.ingest_threads, bound)
         try:
             yield from self._drive(it)
         finally:
@@ -991,6 +1018,28 @@ class ServingPipeline:
             # feeder threads blocked on a full queue.
             if isinstance(it, _IngestFeeder):
                 it.close()
+            self._feeder = None
+
+    def close(self) -> None:
+        """Shut the pipeline down: stop (and join) any live ingest feeder
+        threads and refuse further ``serve`` calls. Idempotent. The
+        ``serve`` generator already closes its feeder in a ``finally``;
+        ``close`` exists for owners that hold the pipeline itself (the
+        router's replica teardown, a ``with`` block) and must guarantee no
+        thread survives even if the generator was never started or was
+        abandoned mid-``yield``. Staged-but-unserved requests are dropped
+        -- the caller abandoned them."""
+        self._closed = True
+        feeder, self._feeder = self._feeder, None
+        if feeder is not None:
+            feeder.close()
+
+    def __enter__(self) -> "ServingPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Context-manager exit: ``close()`` -- feeder threads joined."""
+        self.close()
 
     def _drive(self, it) -> Iterator[RequestRecord]:
         """The cycle loop behind ``serve`` (source already feeder-wrapped)."""

@@ -1,11 +1,11 @@
 """Documentation contract: the public API is documented and the docs are
 true. Docstring checks cover every symbol exported from ``repro.core``,
 ``repro.core.engine``, ``repro.core.serving``, ``repro.core.batch``,
-``repro.core.runner`` and ``repro.dist``; the code blocks in
-``docs/engine.md``, ``docs/serving.md`` and ``docs/admission.md`` are
-executed verbatim (they are the living spec of the engine and the serving
-pipeline); relative links between the markdown files must resolve, and
-README's doc table must link every file in ``docs/``."""
+``repro.core.runner``, ``repro.dist`` and ``repro.serve``; the code blocks
+in ``docs/engine.md``, ``docs/serving.md``, ``docs/admission.md`` and
+``docs/router.md`` are executed verbatim (they are the living spec of the
+engine and the serving tiers); relative links between the markdown files
+must resolve, and README's doc table must link every file in ``docs/``."""
 
 import inspect
 import pathlib
@@ -17,7 +17,8 @@ DOCS = pathlib.Path(__file__).resolve().parent.parent / "docs"
 REPO = DOCS.parent
 
 PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.core.serving",
-                  "repro.core.batch", "repro.core.runner", "repro.dist"]
+                  "repro.core.batch", "repro.core.runner", "repro.dist",
+                  "repro.serve"]
 
 
 def _public_objects(modname):
@@ -49,22 +50,37 @@ def _code_blocks(md_path):
 @pytest.mark.parametrize("md,min_blocks", [("engine.md", 3),
                                            ("serving.md", 3),
                                            ("admission.md", 3),
-                                           ("schedulers.md", 2)])
+                                           ("schedulers.md", 2),
+                                           ("router.md", 3)])
 def test_md_code_blocks_execute(md, min_blocks):
     blocks = _code_blocks(DOCS / md)
     assert len(blocks) >= min_blocks, f"{md} lost its executable examples"
+    # Doc examples register demo schedulers/policies into the process-global
+    # registries; snapshot and restore so later tests see pristine families.
+    from repro.core.schedulers import SCHEDULERS
+    from repro.core.serving import ADMISSION_POLICIES
+    from repro.kernels.ops import BATCH_UPDATE_BACKENDS, UPDATE_BACKENDS
+    from repro.serve.routing import ROUTING_POLICIES
+    registries = (SCHEDULERS, UPDATE_BACKENDS, BATCH_UPDATE_BACKENDS,
+                  ADMISSION_POLICIES, ROUTING_POLICIES)
+    snapshots = [dict(r) for r in registries]
     ns = {}
-    for i, block in enumerate(blocks):
-        try:
-            exec(compile(block, f"docs/{md}[block {i}]", "exec"), ns)
-        except Exception as e:     # pragma: no cover - failure reporting
-            pytest.fail(f"docs/{md} block {i} failed: {e!r}\n{block}")
+    try:
+        for i, block in enumerate(blocks):
+            try:
+                exec(compile(block, f"docs/{md}[block {i}]", "exec"), ns)
+            except Exception as e:     # pragma: no cover - failure reporting
+                pytest.fail(f"docs/{md} block {i} failed: {e!r}\n{block}")
+    finally:
+        for reg, snap in zip(registries, snapshots):
+            reg.clear()
+            reg.update(snap)
 
 
 @pytest.mark.parametrize("md", ["README.md", "docs/architecture.md",
                                 "docs/schedulers.md", "docs/engine.md",
                                 "docs/sharding.md", "docs/serving.md",
-                                "docs/admission.md"])
+                                "docs/admission.md", "docs/router.md"])
 def test_relative_links_resolve(md):
     path = REPO / md
     broken = []

@@ -1,0 +1,302 @@
+"""Router/replica serving tier (repro.serve): the determinism pin vs solo
+``serve_async`` shares, the routing-policy registry (fourth family), work
+stealing's result invariance, and clean thread teardown.
+
+The load-bearing invariant: a request's trajectory depends only on
+(rid, padded shape) -- every replica folds the same base rng and pads
+online to the same ``bucket_shape`` ceilings -- so *which replica* serves a
+request (routing policy, work stealing) can never change a result bit."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import BPConfig, BPEngine, RoundsHistory, serve_async
+from repro.core.batch import bucket_shape
+from repro.pgm import chain_graph, ising_grid
+from repro.serve import (KindAffinityRouting, LeastLoadedRouting,
+                         ROUTING_POLICIES, ReplicaLoad, RoundRobinRouting,
+                         Router, RoutingPolicy, get_routing_policy,
+                         list_routing_policies, register_routing_policy,
+                         serve_routed)
+from repro.serve.replica import _Inbox, _Request
+
+CFG = BPConfig(scheduler="lbp", eps=1e-5, max_rounds=160, history=False)
+KW = dict(max_batch=2, chunk_rounds=16)
+
+
+@pytest.fixture(scope="module")
+def engines():
+    # One engine per replica, shared across tests so jit caches warm once.
+    return [BPEngine(CFG), BPEngine(CFG)]
+
+
+def _mixed_stream():
+    # Two shape families; the C=3.0 grids stall to max_rounds (stragglers).
+    return [ising_grid(6, 1.5, seed=1), chain_graph(30, seed=2),
+            ising_grid(6, 2.0, seed=3), chain_graph(34, seed=4),
+            ising_grid(6, 3.0, seed=5), chain_graph(30, seed=6),
+            ising_grid(6, 1.8, seed=7)]
+
+
+def _assert_bitwise(got, want):
+    assert int(got.rounds) == int(want.rounds)
+    assert int(got.updates) == int(want.updates)
+    np.testing.assert_array_equal(np.asarray(got.logm), np.asarray(want.logm))
+
+
+def _wait_threads(baseline, timeout=10.0):
+    deadline = time.time() + timeout
+    while threading.active_count() > baseline and time.time() < deadline:
+        time.sleep(0.02)
+    return threading.active_count()
+
+
+class TestDeterminismPin:
+    """Acceptance: round_robin + steal=False is bitwise-identical per
+    request to running each replica's share through serve_async solo."""
+
+    def test_round_robin_no_steal_matches_solo_shares(self, engines):
+        stream = _mixed_stream()
+        res = serve_routed(engines, iter(stream), jax.random.key(0),
+                           routing="round_robin", steal=False, **KW)
+        by_rid = {r.rid: r.result for r in res.records}
+        assert sorted(by_rid) == list(range(len(stream)))
+        for k in range(len(engines)):
+            share = [(i, p) for i, p in enumerate(stream)
+                     if i % len(engines) == k]
+            # iter(): the online bucket_shape path, same as the replicas.
+            solo = serve_async(engines[0], iter(share), jax.random.key(0),
+                               **KW)
+            assert solo.records, "share must not be empty"
+            for rec in solo.records:
+                _assert_bitwise(by_rid[rec.rid], rec.result)
+
+    def test_load_aware_routing_and_stealing_results_invariant(self, engines):
+        stream = _mixed_stream()
+        want = serve_async(engines[0], iter(stream), jax.random.key(0),
+                           **KW).records
+        by_rid = {r.rid: r.result for r in want}
+        for routing, steal in (("least_loaded", True),
+                               ("kind_affinity", False)):
+            res = serve_routed(engines, iter(stream), jax.random.key(0),
+                               routing=routing, steal=steal,
+                               low_watermark=2, prefetch=2, **KW)
+            assert len(res.records) == len(stream)
+            for rec in res.records:
+                _assert_bitwise(rec.result, by_rid[rec.rid])
+            if routing == "kind_affinity":
+                # sticky placement: every kind on exactly one replica
+                homes = {}
+                for rec in res.records:
+                    homes.setdefault(rec.kind, set()).add(rec.replica)
+                assert all(len(v) == 1 for v in homes.values()), homes
+
+
+class TestRoutingRegistry:
+    """Satellite: fourth registry family -- uniform error format, duplicate
+    rejection, custom-policy registration."""
+
+    def test_builtins_and_uniform_unknown_name_error(self):
+        assert set(list_routing_policies()) >= {"round_robin", "least_loaded",
+                                                "kind_affinity"}
+        # Same KeyError shape as the scheduler/backend/admission families
+        # (cross-family uniformity is asserted in test_engine.py).
+        with pytest.raises(KeyError,
+                           match=r"unknown routing policy 'nope'; "
+                                 r"registered: \["):
+            get_routing_policy("nope")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="duplicate routing policy"):
+            register_routing_policy("round_robin")(RoundRobinRouting)
+        cls = ROUTING_POLICIES["round_robin"]
+        assert register_routing_policy(
+            "round_robin", overwrite=True)(cls) is cls
+
+    def test_custom_policy_registration_drives_router(self, engines):
+        @register_routing_policy("test_always_last", overwrite=True)
+        class AlwaysLast(RoutingPolicy):
+            name = "test_always_last"
+
+            def pick(self, rid, kind, loads):
+                return len(loads) - 1
+
+        stream = [ising_grid(6, 1.5, seed=s) for s in range(3)]
+        res = serve_routed(engines, iter(stream), jax.random.key(0),
+                           routing="test_always_last", **KW)
+        assert all(rec.replica == len(engines) - 1 for rec in res.records)
+        assert res.stats.policy == "test_always_last"
+        assert res.stats.routed == [0, len(stream)]
+
+    def test_policy_instance_is_per_router(self, engines):
+        pol = RoundRobinRouting()
+        Router(engines, jax.random.key(0), routing=pol, **KW).close()
+        with pytest.raises(ValueError, match="already bound"):
+            Router(engines, jax.random.key(0), routing=pol, **KW)
+        with pytest.raises(ValueError, match="instance"):
+            get_routing_policy(RoundRobinRouting(), spread=2)
+
+
+class TestPolicyPlacement:
+    """Pure pick() logic against synthetic load snapshots."""
+
+    @staticmethod
+    def _loads(*weights):
+        return [ReplicaLoad(replica=i, inbox=0, staged=0, in_flight=0,
+                            effort=w) for i, w in enumerate(weights)]
+
+    def test_round_robin_cycles(self):
+        pol = RoundRobinRouting()
+        loads = self._loads(9.0, 0.0, 5.0)
+        assert [pol.pick(i, (), loads) for i in range(6)] == [0, 1, 2, 0, 1, 2]
+
+    def test_least_loaded_minimizes_weight_ties_to_lowest(self):
+        pol = LeastLoadedRouting()
+        assert pol.pick(0, (), self._loads(3.0, 1.0, 2.0)) == 1
+        assert pol.pick(1, (), self._loads(2.0, 2.0, 5.0)) == 0
+
+    def test_kind_affinity_sticky_and_spread(self):
+        pol = KindAffinityRouting()
+        a, b = ("a",), ("b",)
+        assert pol.pick(0, a, self._loads(5.0, 1.0)) == 1
+        # sticky even after the load situation flips
+        assert pol.pick(1, a, self._loads(0.0, 9.0)) == 1
+        assert pol.pick(2, b, self._loads(0.0, 9.0)) == 0
+        capped = KindAffinityRouting(spread=1)
+        assert capped.pick(0, a, self._loads(1.0, 2.0)) == 0
+        # replica 0 is full (spread=1): new kind overflows to least-loaded
+        # without sticking
+        assert capped.pick(1, b, self._loads(0.0, 9.0)) == 0
+        assert capped.pick(2, b, self._loads(9.0, 0.0)) == 1
+
+
+class TestWorkStealing:
+    """Stealing rebalances a skewed stream without changing any result."""
+
+    def test_hotspot_steal_triggers_and_results_invariant(self, engines):
+        # Custom skew policy: tiny share on replica 0, heavy hotspot on
+        # replica 1 -- replica 0 drains, then must steal the stragglers.
+        @register_routing_policy("test_hotspot", overwrite=True)
+        class Hotspot(RoutingPolicy):
+            name = "test_hotspot"
+
+            def __init__(self):
+                super().__init__()
+                self._n = 0
+
+            def pick(self, rid, kind, loads):
+                i = 0 if self._n < 2 else 1
+                self._n += 1
+                return i
+
+        stream = ([ising_grid(6, 1.5, seed=s) for s in range(2)]
+                  + [ising_grid(6, 3.0, seed=100 + s) for s in range(10)])
+        want = {r.rid: r.result
+                for r in serve_async(engines[0], iter(stream),
+                                     jax.random.key(0), **KW).records}
+        res = serve_routed(engines, iter(stream), jax.random.key(0),
+                           routing="test_hotspot", steal=True,
+                           steal_batch=2, low_watermark=2, prefetch=2,
+                           ingest_queue=1, **KW)
+        assert res.stats.stolen > 0, "skewed stream must trigger stealing"
+        assert res.stats.steals > 0
+        flagged = [rec for rec in res.records if rec.stolen]
+        assert len(flagged) == res.stats.stolen
+        # stolen work really ran on the thief
+        assert any(rec.replica == 0 for rec in flagged)
+        for rec in res.records:
+            _assert_bitwise(rec.result, want[rec.rid])
+
+    def test_inbox_steal_mechanics(self):
+        inbox = _Inbox(capacity=8)
+        reqs = [_Request(rid=i, pgm=None, kind=("k",), t_route=0.0)
+                for i in range(5)]
+        for r in reqs:
+            inbox.put(r)
+        # steal takes from the tail, oldest-first order preserved, victim
+        # keeps at least `leave`
+        got = inbox.steal(10, leave=2)
+        assert [r.rid for r in got] == [2, 3, 4]
+        assert len(inbox) == 2
+        assert inbox.pop(timeout=0.01).rid == 0
+        inbox.finish()
+        with pytest.raises(ValueError, match="closed"):
+            inbox.put(reqs[0])
+        inbox.put(reqs[2], force=True)      # steal transplant still lands
+        assert inbox.pop(timeout=0.01).rid == 1
+        assert inbox.pop(timeout=0.01).rid == 2
+        assert inbox.pop(timeout=0.01) is not None   # _CLOSED sentinel
+        inbox.close()
+        assert len(inbox) == 0
+
+
+class TestTierLifecycle:
+    """Satellite: replica teardown must not leak threads (tier-1 runs in
+    one process; every serve must return the thread count to baseline)."""
+
+    def test_no_thread_leak_after_serve(self, engines):
+        stream = [ising_grid(6, 1.5, seed=s) for s in range(4)]
+        baseline = threading.active_count()
+        res = serve_routed(engines, iter(stream), jax.random.key(0),
+                           routing="round_robin", **KW)
+        assert len(res.records) == len(stream)
+        assert _wait_threads(baseline) <= baseline
+
+    def test_close_tears_down_abandoned_router(self, engines):
+        stream = (ising_grid(6, 3.0, seed=s) for s in range(12))
+        baseline = threading.active_count()
+        router = Router(engines, jax.random.key(1), routing="round_robin",
+                        **KW)
+        gen = router.serve(stream)
+        next(gen)                   # at least one record served
+        router.close()              # abandon mid-stream
+        gen.close()
+        assert _wait_threads(baseline) <= baseline
+        with pytest.raises(ValueError, match="one-shot|closed"):
+            next(router.serve(iter([])))
+
+    def test_router_one_shot_and_duplicate_rids(self, engines):
+        router = Router(engines, jax.random.key(0), **KW)
+        list(router.serve([ising_grid(6, 1.5, seed=0)]))
+        with pytest.raises(ValueError, match="one-shot"):
+            next(router.serve([ising_grid(6, 1.5, seed=1)]))
+        dup = [(0, ising_grid(6, 1.5, seed=0)), (0, ising_grid(6, 1.5,
+                                                               seed=1))]
+        with pytest.raises(ValueError, match="duplicate request id"):
+            list(Router(engines, jax.random.key(0), **KW).serve(iter(dup)))
+
+    def test_engine_arg_validation(self):
+        with pytest.raises(ValueError, match="replicas"):
+            Router([BPEngine(CFG)], jax.random.key(0), replicas=3)
+        with pytest.raises(TypeError, match="engine"):
+            Router(object(), jax.random.key(0))
+        with pytest.raises(ValueError, match="prefetch"):
+            Router(CFG, jax.random.key(0), replicas=1, prefetch=None)
+
+
+class TestObservability:
+    """Replica attribution, merged percentiles, pooled effort history."""
+
+    def test_attribution_percentiles_shared_history(self, engines):
+        stream = _mixed_stream()
+        hist = RoundsHistory()
+        res = serve_routed(engines, iter(stream), jax.random.key(0),
+                           routing="least_loaded", history=hist, **KW)
+        assert {rec.replica for rec in res.records} <= {0, 1}
+        assert sum(len(v) for v in res.by_replica().values()) == len(stream)
+        assert sum(res.stats.routed) == len(stream)
+        pct = res.latency_percentiles()
+        assert set(pct) == {"p50", "p90", "p99"}
+        assert all(np.isfinite(v) for v in pct.values())
+        svc = res.latency_percentiles(field="service")
+        assert svc["p99"] <= pct["p99"] + 1e-6   # service is a sub-interval
+        # effort observations pooled tier-wide under the namespaced kind
+        kind = bucket_shape(stream[0], 2.0)
+        assert hist.mean(("routed", kind)) is not None
+        assert res.device_sweeps >= res.useful_sweeps > 0
+        assert len(res.results) == len(stream)
+        assert all(r is not None for r in res.results)

@@ -527,3 +527,50 @@ class TestThreadedIngestion:
         ServingPipeline(engine, jax.random.key(0), admission=pol)
         with pytest.raises(ValueError, match="already bound"):
             ServingPipeline(engine, jax.random.key(1), admission=pol)
+
+
+class TestPipelineLifecycle:
+    """Satellite: explicit close()/context-manager shutdown. Owners that
+    hold the pipeline (the router tier's replicas) must be able to
+    guarantee no feeder thread survives teardown, even when the serve
+    generator was abandoned mid-yield."""
+
+    def test_close_joins_feeder_threads_and_refuses_serve(self):
+        import threading
+        engine = _lbp_engine(max_rounds=64)
+
+        def src():
+            for s in range(100):
+                yield ising_grid(6, 1.5, seed=s % 4)
+
+        pipe = ServingPipeline(engine, jax.random.key(0), max_batch=2,
+                               chunk_rounds=16, prefetch=2,
+                               ingest_threads=2, ingest_queue=2)
+        before = threading.active_count()
+        gen = pipe.serve(src())
+        next(gen)               # feeder threads live now
+        assert threading.active_count() > before
+        pipe.close()            # owner-side shutdown, generator still open
+        deadline = time.time() + 5
+        while threading.active_count() > before and time.time() < deadline:
+            time.sleep(0.02)
+        assert threading.active_count() <= before   # close() joined them
+        with pytest.raises(ValueError, match="closed"):
+            next(pipe.serve(iter([])))
+        pipe.close()            # idempotent
+
+    def test_context_manager_closes_on_exit(self):
+        import threading
+        engine = _lbp_engine(max_rounds=64)
+        stream = [ising_grid(6, 1.5, seed=s) for s in range(4)]
+        before = threading.active_count()
+        with ServingPipeline(engine, jax.random.key(0), max_batch=2,
+                             chunk_rounds=16, ingest_threads=1) as pipe:
+            recs = list(pipe.serve(iter(stream)))
+        assert len(recs) == len(stream)
+        deadline = time.time() + 5
+        while threading.active_count() > before and time.time() < deadline:
+            time.sleep(0.02)
+        assert threading.active_count() <= before
+        with pytest.raises(ValueError, match="closed"):
+            next(pipe.serve(iter(stream)))

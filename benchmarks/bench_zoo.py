@@ -1,0 +1,242 @@
+"""Workload zoo: LDPC BER curves, stereo decoding, heterogeneous serving.
+
+Three sections, written to ``benchmarks/out/BENCH_zoo.json``:
+
+- **ldpc**: bit-error-rate vs SNR for max-product decoding of regular
+  Gallager codes (``repro.pgm.ldpc_code``) against the uncoded
+  hard-decision baseline on the same received samples. The acceptance
+  number is ``snr_points_beating_uncoded`` -- the decoder must beat
+  uncoded transmission at >= 2 SNR points, in ``--tiny`` mode too (a
+  decoder that cannot beat no-code is not decoding).
+- **stereo**: max-product disparity decoding of the synthetic stereo MRF
+  (``repro.pgm.stereo_mrf``): +-1 accuracy vs the raw observation and MAP
+  energy vs the ground truth's energy (BP should match or beat truth's
+  energy -- the MAP objective is what it optimizes). Plus the banded dist
+  path stress: the stereo grid is exactly the contiguous-band shape
+  ``repro.dist.bp_banded`` was built for, so the same graph runs through
+  ``run_bp_banded`` with its round-count parity vs the single-device
+  engine recorded.
+- **serving**: the full heterogeneous zoo (``repro.pgm.zoo_stream`` --
+  ising/chain/protein/ldpc/stereo at mixed sizes) as one online stream
+  through ``serve_async`` (residual and windowed admission) and
+  ``serve_routed`` (kind_affinity routing, stealing off/on), with
+  *bitwise* per-request parity against solo ``BPEngine.run`` calls on
+  identically padded graphs -- the serving tier's determinism contract
+  extended to the workload mix it was built for.
+
+Usage: python -m benchmarks.bench_zoo [--tiny | --full]
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, out_path
+from repro.core import BPConfig, BPEngine, serve_async
+from repro.core.batch import bucket_shape
+from repro.core.graph import pad_pgm
+from repro.core.messages import map_assignment
+from repro.pgm import ldpc_code, stereo_mrf, zoo_stream
+from repro.serve import serve_routed
+
+
+def _bench_ldpc(record: dict, *, n: int, words: int, snrs) -> None:
+    engine = BPEngine(BPConfig(scheduler="lbp", backend="maxprod",
+                               eps=1e-4, max_rounds=400, history=False))
+    curve = {}
+    beating = 0
+    for snr_db in snrs:
+        t0 = time.perf_counter()
+        coded = uncoded = bits = conv = 0
+        rounds = []
+        for w in range(words):
+            inst = ldpc_code(n, snr_db=snr_db, seed=1000 * w + 7)
+            res = engine.run(inst.pgm, jax.random.key(w))
+            decoded = np.asarray(map_assignment(inst.pgm, res.logm))
+            coded += inst.coded_errors(decoded)
+            uncoded += inst.uncoded_errors
+            bits += inst.n_bits
+            conv += int(bool(res.converged))
+            rounds.append(int(res.rounds))
+        wall = time.perf_counter() - t0
+        cb, ub = coded / bits, uncoded / bits
+        beating += int(cb < ub)
+        curve[f"{snr_db:g}"] = {
+            "coded_ber": cb, "uncoded_ber": ub, "bits": bits,
+            "converged": conv, "words": words,
+            "mean_rounds": float(np.mean(rounds)), "wall_s": wall,
+        }
+        emit(f"zoo/ldpc/snr{snr_db:g}", 1e6 * wall / words,
+             f"coded_ber={cb:.4f};uncoded_ber={ub:.4f};"
+             f"conv={conv}/{words};rounds={np.mean(rounds):.1f}")
+    record["ldpc"] = {
+        "n": n, "dv": 3, "dc": 6, "curve": curve,
+        "snr_points_beating_uncoded": beating,
+        "acceptance": "coded BER < uncoded BER at >= 2 SNR points",
+    }
+    emit("zoo/ldpc/acceptance", 0.0,
+         f"snr_points_beating_uncoded={beating};required=2")
+
+
+def _bench_stereo(record: dict, *, height: int, width: int,
+                  n_disp: int) -> None:
+    inst = stereo_mrf(height, width, n_disp, seed=0)
+    engine = BPEngine(BPConfig(scheduler="rbp", backend="maxprod",
+                               eps=1e-4, max_rounds=2000, history=False))
+    engine.run(inst.pgm, jax.random.key(0))          # warm/compile
+    t0 = time.perf_counter()
+    res = engine.run(inst.pgm, jax.random.key(0))
+    jax.block_until_ready(res.logm)
+    wall = time.perf_counter() - t0
+    n_pix = height * width
+    labels = np.asarray(map_assignment(inst.pgm, res.logm))[:n_pix]
+    obs = np.clip(np.round(inst.obs), 0, n_disp - 1).astype(int)
+    acc_bp, acc_obs = inst.accuracy(labels), inst.accuracy(obs)
+    e_bp, e_truth = inst.energy(labels), inst.energy(inst.truth)
+    emit(f"zoo/stereo/{height}x{width}x{n_disp}", 1e6 * wall,
+         f"acc_bp={acc_bp:.3f};acc_obs={acc_obs:.3f};"
+         f"energy_bp={e_bp:.2f};energy_truth={e_truth:.2f};"
+         f"rounds={int(res.rounds)};conv={bool(res.converged)}")
+
+    # Banded dist stress: the row-major stereo grid is the contiguous-band
+    # shape bp_banded exists for; record LBP round parity vs the engine.
+    from repro.dist import make_bp_mesh
+    from repro.dist.bp_banded import partition_banded, run_bp_banded
+    mesh = make_bp_mesh()
+    n_bands = int(mesh.devices.size)
+    lbp = BPEngine(BPConfig(scheduler="lbp", eps=1e-3, max_rounds=2000,
+                            history=False))
+    ref = lbp.run(inst.pgm, jax.random.key(0))
+    part = partition_banded(inst.pgm, n_bands)
+    run_bp_banded(part, "lbp", mesh, jax.random.key(0), eps=1e-3,
+                  max_rounds=2000)                   # warm/compile
+    t0 = time.perf_counter()
+    _, b_rounds, b_done = run_bp_banded(part, "lbp", mesh, jax.random.key(0),
+                                        eps=1e-3, max_rounds=2000)
+    b_wall = time.perf_counter() - t0
+    parity = int(b_rounds) == int(ref.rounds)
+    emit(f"zoo/stereo/banded{n_bands}", 1e6 * b_wall,
+         f"rounds={int(b_rounds)};round_parity_vs_ref={parity};"
+         f"conv={bool(b_done)}")
+    record["stereo"] = {
+        "height": height, "width": width, "n_disp": n_disp,
+        "accuracy_bp": acc_bp, "accuracy_observation": acc_obs,
+        "energy_bp": e_bp, "energy_truth": e_truth,
+        "energy_observation": inst.energy(obs),
+        "rounds": int(res.rounds), "converged": bool(res.converged),
+        "wall_s": wall,
+        "banded": {"bands": n_bands, "rounds": int(b_rounds),
+                   "round_parity_vs_ref": parity, "wall_s": b_wall},
+        "acceptance": "energy_bp <= energy_truth and accuracy_bp >= "
+                      "accuracy_observation",
+    }
+
+
+def _bench_serving(record: dict, *, n_requests: int) -> None:
+    stream = [p for _, p in zoo_stream(n_requests, seed=0)]
+    rng = jax.random.key(0)
+    engine = BPEngine(BPConfig(scheduler="lbp", backend="maxprod",
+                               eps=1e-3, max_rounds=256, history=False))
+
+    def solo(rid):
+        # The online pipeline pads each request to its own bucket_shape
+        # ceilings; the solo reference must run on the identically padded
+        # graph (stochastic schedulers would draw over the padded edge
+        # axis, and rounds/updates count over padded shapes).
+        e, v, s, re_, rv = bucket_shape(stream[rid], 2.0)
+        padded = pad_pgm(stream[rid], n_edges=e, n_vertices=v, n_states=s,
+                         n_real_edges=re_, n_real_vertices=rv)
+        return engine.run(padded, jax.random.fold_in(rng, rid))
+
+    want = {rid: solo(rid) for rid in range(len(stream))}
+
+    def check(records):
+        for rec in records:
+            w = want[rec.rid]
+            if int(rec.result.rounds) != int(w.rounds):
+                return False
+            if not np.array_equal(np.asarray(rec.result.logm),
+                                  np.asarray(w.logm)):
+                return False
+        return len(records) == len(stream)
+
+    kw = dict(max_batch=3, chunk_rounds=32, prefetch=4, slots=2)
+    record["serving"] = {"requests": len(stream), "configs": {}}
+    for policy in ("residual", "windowed"):
+        serve_async(engine, iter(stream), rng, admission=policy, **kw)
+        t0 = time.perf_counter()
+        rep = serve_async(engine, iter(stream), rng, admission=policy, **kw)
+        wall = time.perf_counter() - t0
+        ok = check(rep.records)
+        emit(f"zoo/serve_async/{policy}", 1e6 * wall / len(stream),
+             f"graphs_per_s={len(stream) / wall:.2f};bitwise_vs_solo={ok};"
+             f"wasted_sweeps={rep.stats.wasted_sweeps}")
+        record["serving"]["configs"][f"serve_async/{policy}"] = {
+            "wall_s": wall, "bitwise_vs_solo": ok,
+            "wasted_sweeps": rep.stats.wasted_sweeps,
+            "useful_sweeps": rep.stats.useful_sweeps,
+        }
+    engines = [BPEngine(engine.config) for _ in range(2)]
+    for steal in (False, True):
+        serve_routed(engines, iter(stream), rng, routing="kind_affinity",
+                     steal=steal, **kw)
+        t0 = time.perf_counter()
+        rep = serve_routed(engines, iter(stream), rng,
+                           routing="kind_affinity", steal=steal, **kw)
+        wall = time.perf_counter() - t0
+        ok = check(rep.records)
+        mode = "steal_on" if steal else "steal_off"
+        emit(f"zoo/serve_routed/kind_affinity/{mode}",
+             1e6 * wall / len(stream),
+             f"graphs_per_s={len(stream) / wall:.2f};bitwise_vs_solo={ok};"
+             f"steals={rep.stats.steals};stolen={rep.stats.stolen}")
+        record["serving"]["configs"][f"serve_routed/kind_affinity/{mode}"] = {
+            "wall_s": wall, "bitwise_vs_solo": ok,
+            "steals": rep.stats.steals, "stolen": rep.stats.stolen,
+            "wasted_sweeps": rep.wasted_sweeps,
+        }
+    record["serving"]["bitwise_all"] = all(
+        c["bitwise_vs_solo"] for c in record["serving"]["configs"].values())
+    record["serving"]["acceptance"] = (
+        "every config completes the mixed stream with bitwise per-request "
+        "parity vs solo runs")
+
+
+def run(full: bool = False, n_graphs: int = 0, tiny: bool = False) -> None:
+    """Emit the zoo rows and write BENCH_zoo.json. ``tiny`` is the CI
+    smoke scale (the acceptance columns must hold there too)."""
+    record = {
+        "suite": "zoo", "backend": jax.default_backend(),
+        "platform": platform.machine(), "unix_time": time.time(),
+        "mode": "tiny" if tiny else ("full" if full else "default"),
+        "note": ("acceptance: ldpc.snr_points_beating_uncoded >= 2 and "
+                 "serving.bitwise_all == true at every scale"),
+    }
+    if tiny:
+        _bench_ldpc(record, n=48, words=4, snrs=(1.0, 2.0, 3.0))
+        _bench_stereo(record, height=8, width=12, n_disp=6)
+        _bench_serving(record, n_requests=n_graphs or 9)
+    elif full:
+        _bench_ldpc(record, n=96, words=16,
+                    snrs=(0.5, 1.0, 1.5, 2.0, 2.5, 3.0))
+        _bench_stereo(record, height=24, width=32, n_disp=12)
+        _bench_serving(record, n_requests=n_graphs or 18)
+    else:
+        _bench_ldpc(record, n=48, words=8, snrs=(1.0, 2.0, 3.0))
+        _bench_stereo(record, height=12, width=16, n_disp=8)
+        _bench_serving(record, n_requests=n_graphs or 9)
+
+    with open(out_path("BENCH_zoo.json"), "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    run(full="--full" in sys.argv, tiny="--tiny" in sys.argv)

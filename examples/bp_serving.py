@@ -36,6 +36,10 @@ Knobs:
                    least_loaded | kind_affinity (docs/router.md)
   --steal          cross-replica work stealing: a drained replica pulls
                    a batch from the deepest peer's inbox
+  --workload       request mix: legacy (historic 3-kind stream), mixed
+                   (the full heterogeneous zoo_stream -- ising/chain/
+                   protein/ldpc/stereo at mixed sizes), or any one
+                   registered zoo generator (repro.pgm.WORKLOADS)
   --scheduler      message scheduler (rnbp default); --backend picks the
                    update backend -- these flags (and --policy/--routing)
                    take their choices from the live registries via
@@ -58,18 +62,29 @@ import numpy as np
 
 from repro.core import (BPConfig, BPEngine, list_admission_policies,
                         list_backends, list_schedulers, serve_async)
-from repro.pgm import chain_graph, ising_grid, protein_like_graph
+from repro.pgm import (chain_graph, get_workload, ising_grid, list_workloads,
+                       protein_like_graph, zoo_stream)
 from repro.serve import list_routing_policies, serve_routed
 
 
-def request_stream(n):
-    kinds = [
-        lambda s: ("ising30/C2.5", ising_grid(30, 2.5, seed=s)),
-        lambda s: ("chain2000/C10", chain_graph(2000, seed=s)),
-        lambda s: ("protein60", protein_like_graph(60, seed=s)),
-    ]
-    for i in range(n):
-        yield (i,) + kinds[i % 3](i)
+def request_stream(n, workload="legacy"):
+    """(rid, kind, pgm) triples: the historic 3-kind mix (``legacy``), the
+    full heterogeneous zoo (``mixed``), or one registered zoo workload."""
+    if workload == "legacy":
+        kinds = [
+            lambda s: ("ising30/C2.5", ising_grid(30, 2.5, seed=s)),
+            lambda s: ("chain2000/C10", chain_graph(2000, seed=s)),
+            lambda s: ("protein60", protein_like_graph(60, seed=s)),
+        ]
+        for i in range(n):
+            yield (i,) + kinds[i % 3](i)
+    elif workload == "mixed":
+        for i, (kind, pgm) in enumerate(zoo_stream(n)):
+            yield i, kind, pgm
+    else:
+        gen = get_workload(workload)
+        for i in range(n):
+            yield i, workload, gen(seed=i)
 
 
 def main():
@@ -114,6 +129,12 @@ def main():
     ap.add_argument("--steal", action="store_true",
                     help="cross-replica work stealing when a replica's "
                          "pending work drains below its low watermark")
+    ap.add_argument("--workload", default="legacy",
+                    choices=["legacy", "mixed"] + list_workloads(),
+                    help="request mix: the historic 3-kind stream "
+                         "(legacy), the heterogeneous zoo_stream (mixed), "
+                         "or one registered zoo generator "
+                         "(docs/workloads.md)")
     args = ap.parse_args()
 
     sched_kwargs = ({"low_p": 0.4, "high_p": 0.9}  # paper's protein run
@@ -136,7 +157,7 @@ def main():
         # Online path: the generator is consumed lazily; each request is
         # padded + device_put the moment it is pulled (bucket_shape
         # ceilings), overlapped with the in-flight device chunks.
-        for rid, kind, pgm in request_stream(args.requests):
+        for rid, kind, pgm in request_stream(args.requests, args.workload):
             kinds[rid] = kind
             yield pgm
 
@@ -156,7 +177,7 @@ def main():
                           growth=args.growth, slots=2,
                           prefetch=2 * args.max_batch, **kw)
     else:
-        stream = list(request_stream(args.requests))
+        stream = list(request_stream(args.requests, args.workload))
         kinds = {r[0]: r[1] for r in stream}
         pgms = [r[2] for r in stream]
         t_build = time.perf_counter() - t_all

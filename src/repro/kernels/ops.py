@@ -115,6 +115,11 @@ def _make_sharded_update(**kwargs):
 #: (dict subclass): plain-dict reads keep working.
 UPDATE_BACKENDS = Registry("update backend", {
     "ref": lambda: M.ref_update,
+    # Max-product (MAP) semiring: scheduling is semiring-agnostic (paper
+    # SSV), so swapping the update swaps the inference task -- the LDPC
+    # decoding workload serves through the unchanged engine/serving stack
+    # with BPConfig(backend="maxprod") and map_assignment on the result.
+    "maxprod": lambda: M.max_product_update,
     "pallas": make_pallas_update,
     # Multi-device shard_map update over the edge axis (repro.dist). With
     # no kwargs a mesh over all devices is built at resolve time, so

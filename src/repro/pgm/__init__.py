@@ -1,5 +1,13 @@
-from repro.pgm.datasets import (chain_graph, ising_grid, ising_grid_fast,
-                                loop_graph, protein_like_graph, small_ising)
+from repro.pgm.datasets import (LDPCInstance, StereoInstance, WORKLOADS,
+                                chain_graph, get_workload, ising_grid,
+                                ising_grid_fast, ldpc_code, ldpc_graph,
+                                list_workloads, loop_graph,
+                                protein_like_graph, register_workload,
+                                small_ising, stereo_graph, stereo_mrf,
+                                zoo_stream)
 
-__all__ = ["ising_grid", "ising_grid_fast", "chain_graph", "loop_graph",
-           "protein_like_graph", "small_ising"]
+__all__ = ["LDPCInstance", "StereoInstance", "WORKLOADS", "chain_graph",
+           "get_workload", "ising_grid", "ising_grid_fast", "ldpc_code",
+           "ldpc_graph", "list_workloads", "loop_graph",
+           "protein_like_graph", "register_workload", "small_ising",
+           "stereo_graph", "stereo_mrf", "zoo_stream"]

@@ -1,10 +1,12 @@
 """Documentation contract: the public API is documented and the docs are
 true. Docstring checks cover every symbol exported from ``repro.core``,
 ``repro.core.engine``, ``repro.core.serving``, ``repro.core.batch``,
-``repro.core.runner``, ``repro.dist`` and ``repro.serve``; the code blocks
-in ``docs/engine.md``, ``docs/serving.md``, ``docs/admission.md`` and
-``docs/router.md`` are executed verbatim (they are the living spec of the
-engine and the serving tiers); relative links between the markdown files
+``repro.core.runner``, ``repro.dist``, ``repro.serve`` and
+``repro.pgm.datasets``; the code blocks in ``docs/engine.md``,
+``docs/serving.md``, ``docs/admission.md``, ``docs/router.md`` and
+``docs/workloads.md`` are executed verbatim (they are the living spec of
+the engine, the serving tiers and the workload zoo); relative links
+between the markdown files
 must resolve, and README's doc table must link every file in ``docs/``."""
 
 import inspect
@@ -18,7 +20,7 @@ REPO = DOCS.parent
 
 PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.core.serving",
                   "repro.core.batch", "repro.core.runner", "repro.dist",
-                  "repro.serve"]
+                  "repro.serve", "repro.pgm.datasets"]
 
 
 def _public_objects(modname):
@@ -51,7 +53,8 @@ def _code_blocks(md_path):
                                            ("serving.md", 3),
                                            ("admission.md", 3),
                                            ("schedulers.md", 2),
-                                           ("router.md", 3)])
+                                           ("router.md", 3),
+                                           ("workloads.md", 3)])
 def test_md_code_blocks_execute(md, min_blocks):
     blocks = _code_blocks(DOCS / md)
     assert len(blocks) >= min_blocks, f"{md} lost its executable examples"
@@ -60,9 +63,10 @@ def test_md_code_blocks_execute(md, min_blocks):
     from repro.core.schedulers import SCHEDULERS
     from repro.core.serving import ADMISSION_POLICIES
     from repro.kernels.ops import BATCH_UPDATE_BACKENDS, UPDATE_BACKENDS
+    from repro.pgm.datasets import WORKLOADS
     from repro.serve.routing import ROUTING_POLICIES
     registries = (SCHEDULERS, UPDATE_BACKENDS, BATCH_UPDATE_BACKENDS,
-                  ADMISSION_POLICIES, ROUTING_POLICIES)
+                  ADMISSION_POLICIES, ROUTING_POLICIES, WORKLOADS)
     snapshots = [dict(r) for r in registries]
     ns = {}
     try:
@@ -80,7 +84,8 @@ def test_md_code_blocks_execute(md, min_blocks):
 @pytest.mark.parametrize("md", ["README.md", "docs/architecture.md",
                                 "docs/schedulers.md", "docs/engine.md",
                                 "docs/sharding.md", "docs/serving.md",
-                                "docs/admission.md", "docs/router.md"])
+                                "docs/admission.md", "docs/router.md",
+                                "docs/workloads.md"])
 def test_relative_links_resolve(md):
     path = REPO / md
     broken = []

@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (bench_batch, bench_correctness, bench_dist,
                         bench_greedy, bench_kernel, bench_protein,
-                        bench_rnbp, bench_router, bench_tradeoff, bench_zoo)
+                        bench_rnbp, bench_router, bench_sla,
+                        bench_tradeoff, bench_zoo)
 
 SUITES = {
     "fig2_tradeoff": bench_tradeoff,
@@ -25,6 +26,7 @@ SUITES = {
     "batch": bench_batch,
     "dist": bench_dist,
     "router": bench_router,
+    "sla": bench_sla,
     "zoo": bench_zoo,
 }
 

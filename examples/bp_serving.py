@@ -26,8 +26,13 @@ Knobs:
   --chunk-rounds   rounds per device chunk between evacuation sweeps
   --no-evacuate    PR-1 baseline: run every bucket to completion
   --policy         admission policy: fifo (default) | residual (co-batch
-                   by expected effort) | windowed (delay for fullness)
+                   by expected effort) | windowed (delay for fullness) |
+                   deadline (SLA tier: slack-ordered admission, slot
+                   packing, mid-flight eviction of hopeless requests)
   --window-ms      windowed policy's admission window
+  --slo-ms         per-request latency budget attached to the stream
+                   (enables SLO-attainment reporting; the deadline
+                   policy evicts what will miss it)
   --ingest-threads feeder threads pulling the stream behind a bounded
                    queue (0 = pull on the serving thread)
   --replicas       N > 1 serves through the router tier (repro.serve):
@@ -117,6 +122,10 @@ def main():
                     help="message-update backend (BPConfig.backend)")
     ap.add_argument("--window-ms", type=float, default=10.0,
                     help="windowed policy: admission window in ms")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="latency budget per request in ms; attaches "
+                         "(rid, pgm, slo) triples to the stream and "
+                         "reports SLO attainment + evictions")
     ap.add_argument("--ingest-threads", type=int, default=0,
                     help="feeder threads pulling the request stream "
                          "(0 = pull on the serving thread)")
@@ -153,13 +162,16 @@ def main():
               admission_kwargs=admission_kwargs,
               ingest_threads=args.ingest_threads)
 
+    slo_s = None if args.slo_ms is None else args.slo_ms / 1e3
+
     def online():
         # Online path: the generator is consumed lazily; each request is
         # padded + device_put the moment it is pulled (bucket_shape
-        # ceilings), overlapped with the in-flight device chunks.
+        # ceilings), overlapped with the in-flight device chunks. With an
+        # SLO the items become (rid, pgm, slo) deadline triples.
         for rid, kind, pgm in request_stream(args.requests, args.workload):
             kinds[rid] = kind
-            yield pgm
+            yield pgm if slo_s is None else (rid, pgm, slo_s)
 
     if args.replicas > 1:
         print(f"{args.requests} requests (router tier: {args.replicas} "
@@ -185,8 +197,11 @@ def main():
               f"width={args.max_batch}); build {t_build:.2f}s", flush=True)
         # Same bitwise results as engine.serve(...) -- the materialized
         # plan with one resident slot is the legacy driver -- but routed
-        # through the pipeline so per-request latency is recorded.
-        rep = serve_async(engine, pgms, jax.random.key(0),
+        # through the pipeline so per-request latency is recorded. (With
+        # an SLO the stream carries deadline triples and runs online.)
+        items = pgms if slo_s is None else [
+            (r[0], r[2], slo_s) for r in stream]
+        rep = serve_async(engine, items, jax.random.key(0),
                           growth=args.growth, compact=False, slots=1,
                           prefetch=None, **kw)
 
@@ -197,11 +212,12 @@ def main():
         ok = bool(rec.result.converged)
         done += ok
         failed += not ok
+        tag = "EVIC" if rec.evicted else ("ok  " if ok else "FAIL")
         marg = np.exp(np.asarray(rec.result.beliefs[0]))
         where = (f" r{rec.replica}{'*' if rec.stolen else ' '}"
                  if args.replicas > 1 else "")
         print(f"req {rid:3d} {kinds[rid]:14s} "
-              f"{'ok  ' if ok else 'FAIL'} rounds={int(rec.result.rounds):5d} "
+              f"{tag} rounds={int(rec.result.rounds):5d} "
               f"latency={rec.latency_s * 1e3:8.1f}ms "
               f"(queue {rec.queue_s * 1e3:7.1f}ms){where} "
               f"P(x0)={np.round(marg[:2], 3)}", flush=True)
@@ -219,6 +235,13 @@ def main():
     print(f"\nserved {done}/{args.requests} converged "
           f"({failed} unconverged) in {wall:.1f}s "
           f"({args.requests / wall:.1f} graphs/s, {policy})")
+    if slo_s is not None:
+        attained = sum(1 for rec in rep.records if rec.within_slo)
+        evicted = sum(1 for rec in rep.records if rec.evicted)
+        print(f"SLO {args.slo_ms:.0f}ms: attainment "
+              f"{attained}/{len(rep.records)} "
+              f"({100 * attained / max(len(rep.records), 1):.0f}%), "
+              f"{evicted} evicted")
     print(f"latency ms:        p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
           f"p99={pct['p99']:.1f}")
     print(f"admission-wait ms: p50={adm['p50']:.1f} p95={adm['p95']:.1f} "

@@ -13,7 +13,10 @@ Public API (the unified engine):
                      pluggable admission, threaded ingestion
   ServingPipeline    the pipeline driver behind serve_async (generator API)
   AdmissionPolicy    admission-policy base + registry (fifo/residual/
-                     windowed via get_admission_policy)
+                     windowed/deadline via get_admission_policy);
+                     DeadlineAdmission is the SLA tier -- per-request
+                     deadlines, slack-ordered admission, slot packing,
+                     mid-flight eviction (SweepClock for virtual time)
   get_scheduler      registry: "lbp"/"rbp"/"rs"/"rnbp"/"rlx"/"rlxtree"
                      -> Scheduler
   Registry           the shared name->entry registry class behind the
@@ -38,14 +41,16 @@ from repro.core.engine import (BPConfig, BPEngine, BPResult, BPState,
                                ServeResult, ServeStats)
 from repro.core.serving import (ADMISSION_POLICIES, AdmissionPolicy,
                                 AsyncServeResult, AsyncServeStats,
-                                FIFOAdmission, RequestRecord,
-                                ResidualAdmission, ServingPipeline,
+                                DeadlineAdmission, FIFOAdmission,
+                                RequestRecord, ResidualAdmission,
+                                ServingPipeline, SweepClock,
                                 WindowedAdmission, get_admission_policy,
                                 list_admission_policies,
                                 register_admission_policy, serve_async)
 from repro.core.runner import run_bp
-from repro.core.batch import (BatchedPGM, Bucket, RoundsHistory, batch_keys,
-                              bucket_key, bucket_pgms, group_ceilings,
+from repro.core.batch import (BatchedPGM, Bucket, RidgeEffort,
+                              RoundsHistory, batch_keys, bucket_key,
+                              bucket_pgms, group_ceilings,
                               run_bp_batch, run_bp_many)
 from repro.core.schedulers import (LBP, RBP, RLX, RLXTree, RS, RnBP,
                                    SCHEDULERS, get_scheduler,
@@ -63,13 +68,14 @@ __all__ = [
     "ServeResult", "ServeStats",
     "AsyncServeResult", "AsyncServeStats", "RequestRecord",
     "ServingPipeline", "serve_async",
-    "ADMISSION_POLICIES", "AdmissionPolicy", "FIFOAdmission",
-    "ResidualAdmission", "WindowedAdmission", "get_admission_policy",
+    "ADMISSION_POLICIES", "AdmissionPolicy", "DeadlineAdmission",
+    "FIFOAdmission", "ResidualAdmission", "SweepClock",
+    "WindowedAdmission", "get_admission_policy",
     "register_admission_policy",
     "Registry", "list_schedulers", "list_backends",
     "list_admission_policies",
-    "BatchedPGM", "Bucket", "RoundsHistory", "batch_keys", "bucket_key",
-    "bucket_pgms", "group_ceilings",
+    "BatchedPGM", "Bucket", "RidgeEffort", "RoundsHistory", "batch_keys",
+    "bucket_key", "bucket_pgms", "group_ceilings",
     "LBP", "RBP", "RS", "RnBP", "RLX", "RLXTree", "SCHEDULERS",
     "get_scheduler", "register_scheduler", "scheduler_spec",
     "SRBPResult", "srbp_run",

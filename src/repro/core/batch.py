@@ -26,7 +26,8 @@ import dataclasses
 import threading
 import warnings
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Mapping, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +36,9 @@ import numpy as np
 from repro.core.graph import EDGE_PAD, PGM, VERTEX_PAD, pad_pgm_arrays
 from repro.core.schedulers.base import Scheduler
 
-__all__ = ["BatchedPGM", "Bucket", "RoundsHistory", "batch_keys",
-           "bucket_key", "bucket_pgms", "bucket_shape", "group_ceilings",
-           "run_bp_batch", "run_bp_many"]
+__all__ = ["BatchedPGM", "Bucket", "RidgeEffort", "RoundsHistory",
+           "batch_keys", "bucket_key", "bucket_pgms", "bucket_shape",
+           "group_ceilings", "run_bp_batch", "run_bp_many"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -274,66 +275,247 @@ def bucket_pgms(pgms: Sequence[PGM], *,
     return buckets
 
 
+class RidgeEffort:
+    """Tiny incrementally-fit ridge regression predicting rounds-to-converge.
+
+    The learned half of effort calibration: each completed request
+    contributes one ``(features, rounds)`` observation via normal-equation
+    accumulators (``A^T A`` / ``A^T y``, O(d^2) per fit, d = ``DIM``), and
+    ``predict`` solves the l2-regularized system lazily. Features come from
+    :meth:`features`: a bias, the admission score (residual-at-admit), the
+    log-scaled edge/state ceilings mined from the kind tuple, and up to two
+    caller-supplied extras (the deadline policy passes coupling-strength
+    stats). Because size enters as a *feature* rather than a table key, one
+    global model generalizes across kinds -- an unseen bucket shape gets a
+    prediction from the first observation of any other shape, which the
+    nearest-neighbor table it replaces never could.
+
+    ``to_dict``/``from_dict`` round-trip the accumulators exactly (JSON-safe
+    nested lists), so a warm effort model can ship with a deployment spec.
+    Not internally locked: :class:`RoundsHistory` serializes access."""
+
+    #: feature dimension: [1, score, log1p(edges), log1p(states), extra0,
+    #: extra1]
+    DIM = 6
+
+    def __init__(self, l2: float = 1.0):
+        if l2 <= 0:
+            raise ValueError(f"l2 must be > 0, got {l2}")
+        self.l2 = float(l2)
+        self._ata = np.zeros((self.DIM, self.DIM), dtype=np.float64)
+        self._aty = np.zeros(self.DIM, dtype=np.float64)
+        self._n = 0
+        self._w: np.ndarray | None = None
+
+    @staticmethod
+    def features(kind, score: float,
+                 extra: Sequence[float] = ()) -> np.ndarray:
+        """The fixed-width feature vector for one request: ``[1, score,
+        log1p(edge ceiling), log1p(state ceiling), extra...]``, zero-padded
+        to ``DIM``. Numeric leaves are mined from the (possibly nested)
+        ``kind`` tuple -- serving kinds are ``bucket_shape`` ceilings
+        ``(E, V, S, rE, rV)``, router kinds wrap them in ``("routed", ...)``
+        -- with non-numeric leaves skipped, so any hashable kind works."""
+        nums: List[float] = []
+
+        def walk(x):
+            if isinstance(x, bool):
+                return
+            if isinstance(x, (int, float, np.integer, np.floating)):
+                nums.append(float(x))
+            elif isinstance(x, (tuple, list)):
+                for y in x:
+                    walk(y)
+
+        walk(kind)
+        f = [1.0, float(score)]
+        f += [float(np.log1p(abs(nums[i]))) for i in (0, 2)
+              if i < len(nums)]                    # edge / state ceilings
+        f += [float(v) for v in list(extra)[:RidgeEffort.DIM - len(f)]]
+        f += [0.0] * (RidgeEffort.DIM - len(f))
+        return np.asarray(f[:RidgeEffort.DIM], dtype=np.float64)
+
+    @property
+    def n_observations(self) -> int:
+        """Observations fitted so far."""
+        return self._n
+
+    def fit_one(self, x: np.ndarray, y: float) -> None:
+        """Accumulate one observation (features ``x``, observed rounds
+        ``y``) into the normal equations; invalidates the cached solve."""
+        x = np.asarray(x, dtype=np.float64)
+        self._ata += np.outer(x, x)
+        self._aty += float(y) * x
+        self._n += 1
+        self._w = None
+
+    def predict(self, x: np.ndarray) -> float | None:
+        """Predicted rounds for features ``x`` (clipped at 0; ``None``
+        until at least two observations were fitted -- one point cannot
+        anchor a slope)."""
+        if self._n < 2:
+            return None
+        if self._w is None:
+            self._w = np.linalg.solve(
+                self._ata + self.l2 * np.eye(self.DIM), self._aty)
+        return max(float(np.dot(x, self._w)), 0.0)
+
+    def to_dict(self) -> dict:
+        """JSON-ready accumulator state (exact round-trip)."""
+        return {"l2": self.l2, "n": self._n,
+                "ata": self._ata.tolist(), "aty": self._aty.tolist()}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "RidgeEffort":
+        """Rebuild a model from :meth:`to_dict` output."""
+        m = cls(l2=float(d["l2"]))
+        m._n = int(d["n"])
+        m._ata = np.asarray(d["ata"], dtype=np.float64)
+        m._aty = np.asarray(d["aty"], dtype=np.float64)
+        return m
+
+
 class RoundsHistory:
-    """Bounded, thread-safe per-kind history of observed BP round counts.
+    """Bounded, thread-safe effort calibration: per-kind observations plus
+    (by default) a learned :class:`RidgeEffort` predictor over them.
 
     A *kind* is any hashable key naming a family of similar requests -- the
     serving layer uses the bucket-shape ceilings (``bucket_shape`` /
     ``group_ceilings`` tuples), so graphs that share a padded shape share a
     history. ``observe(kind, score, rounds)`` records one finished request's
     (admission score, rounds actually run); ``expect(kind, score)`` predicts
-    the rounds a new request will need as the observed rounds of the
-    *nearest recorded score* in its kind (``None`` with no history yet);
-    ``mean(kind)`` is the score-free aggregate (mean observed rounds) the
-    router tier uses for effort-in-flight load estimates.
+    the rounds a new request will need; ``mean(kind)`` is the score-free
+    aggregate the router tier uses for effort-in-flight load estimates.
 
-    This is the feedback half of Residual-BP-style admission
-    (``repro.core.serving.ResidualAdmission``): the cheap residual-at-admit
-    proxy orders requests, and this history calibrates that proxy into an
-    expected-effort estimate from what actually happened to similar
-    requests. ``capacity`` bounds observations kept per kind (a deque, so
+    ``predictor`` picks the expectation model: ``"ridge"`` (default) fits
+    one incremental :class:`RidgeEffort` regression over (score, size, extra)
+    features of *every* observation -- cross-kind generalization, so unseen
+    shapes stop cold-starting -- while ``"nearest"`` is the original
+    per-kind nearest-recorded-score lookup. Both fall back, in order, to
+    the kind's nearest observation, the constructor ``prior`` (the
+    prior-seeding knob: a deployment's known typical rounds), and finally
+    the caller's ``default=`` -- so callers no longer need a ``None``
+    branch. ``capacity`` bounds observations kept per kind (a deque, so
     drifting workloads age out), keeping host memory O(kinds) on
     indefinitely long streams.
+
+    This is the feedback half of Residual-BP-style admission
+    (``repro.core.serving.ResidualAdmission`` and the ``deadline`` policy's
+    slack prediction): the cheap residual-at-admit proxy orders requests,
+    and this history calibrates that proxy into expected effort from what
+    actually happened to similar requests.
 
     All methods lock, so one instance may be shared across serving threads
     -- ``repro.serve`` hands every replica the same history, pooling effort
     calibration instead of cold-starting it per replica."""
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, *, predictor: str = "ridge",
+                 prior: float | None = None, l2: float = 1.0):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if predictor not in ("ridge", "nearest"):
+            raise ValueError(
+                f"predictor must be 'ridge' or 'nearest', got {predictor!r}")
         self.capacity = capacity
+        self.predictor = predictor
+        self.prior = None if prior is None else float(prior)
+        self._model = RidgeEffort(l2=l2) if predictor == "ridge" else None
         self._hist: Dict[Any, Deque[Tuple[float, float]]] = {}
         self._lock = threading.Lock()
 
-    def observe(self, kind, score: float, rounds: float) -> None:
-        """Record one completed request of ``kind``: its admission score and
-        the rounds it actually ran before release."""
+    def observe(self, kind, score: float, rounds: float,
+                extra: Sequence[float] = ()) -> None:
+        """Record one completed request of ``kind``: its admission score,
+        the rounds it actually ran before release, and optional extra
+        feature values (coupling stats) for the learned predictor."""
         with self._lock:
             dq = self._hist.get(kind)
             if dq is None:
                 dq = self._hist[kind] = deque(maxlen=self.capacity)
             dq.append((float(score), float(rounds)))
+            if self._model is not None:
+                self._model.fit_one(
+                    RidgeEffort.features(kind, score, extra), rounds)
 
-    def expect(self, kind, score: float) -> float | None:
+    def _nearest(self, kind, score: float) -> float | None:
+        dq = self._hist.get(kind)
+        if not dq:
+            return None
+        return min(dq, key=lambda sr: abs(sr[0] - float(score)))[1]
+
+    def expect(self, kind, score: float, *, default: float | None = None,
+               extra: Sequence[float] = ()) -> float | None:
         """Expected rounds for a new request of ``kind`` with admission
-        ``score``: the observed rounds of the nearest recorded score, or
-        ``None`` when the kind has no history yet."""
+        ``score``: the ridge prediction when the model has data (any kind's
+        data -- size is a feature), else the kind's nearest recorded score,
+        else the seeded ``prior``, else ``default``. Callers that always
+        need a number pass ``default=`` instead of branching on ``None``."""
         with self._lock:
-            dq = self._hist.get(kind)
-            if not dq:
-                return None
-            return min(dq, key=lambda sr: abs(sr[0] - float(score)))[1]
+            if self._model is not None:
+                est = self._model.predict(
+                    RidgeEffort.features(kind, score, extra))
+                if est is not None:
+                    return est
+            est = self._nearest(kind, score)
+            if est is not None:
+                return est
+            return self.prior if self.prior is not None else default
 
-    def mean(self, kind) -> float | None:
-        """Mean observed rounds across every record of ``kind`` (``None``
-        with no history yet) -- the score-free effort estimate for callers
-        that have no admission score at hand (request routing)."""
+    def mean(self, kind=None, *, default: float | None = None
+             ) -> float | None:
+        """Mean observed rounds across every record of ``kind`` -- the
+        score-free effort estimate for callers with no admission score at
+        hand (request routing). An unseen kind falls back to the global
+        mean over *all* kinds (``kind=None`` asks for that directly), then
+        the seeded ``prior``, then ``default``."""
         with self._lock:
-            dq = self._hist.get(kind)
-            if not dq:
-                return None
-            return sum(r for _, r in dq) / len(dq)
+            if kind is not None:
+                dq = self._hist.get(kind)
+                if dq:
+                    return sum(r for _, r in dq) / len(dq)
+            total = n = 0.0
+            for dq in self._hist.values():
+                total += sum(r for _, r in dq)
+                n += len(dq)
+            if n:
+                return total / n
+            return self.prior if self.prior is not None else default
+
+    def to_dict(self) -> dict:
+        """JSON-ready snapshot: config, per-kind observations (kinds keyed
+        by ``repr``), and the ridge accumulators. Round-trips through
+        :meth:`from_dict` to a history with identical predictions."""
+        with self._lock:
+            return {
+                "capacity": self.capacity, "predictor": self.predictor,
+                "prior": self.prior,
+                "model": None if self._model is None
+                else self._model.to_dict(),
+                "hist": [[repr(k), [list(sr) for sr in dq]]
+                         for k, dq in self._hist.items()],
+            }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "RoundsHistory":
+        """Rebuild a history from :meth:`to_dict` output. Kind keys were
+        serialized by ``repr`` and are restored via ``ast.literal_eval``
+        (serving kinds are literal tuples); non-literal kinds keep their
+        repr string as the key -- predictions still work, size features
+        simply read as absent."""
+        import ast
+        h = cls(capacity=int(d["capacity"]), predictor=d["predictor"],
+                prior=d.get("prior"))
+        if d.get("model") is not None:
+            h._model = RidgeEffort.from_dict(d["model"])
+        for krepr, obs in d.get("hist", ()):
+            try:
+                kind = ast.literal_eval(krepr)
+            except (ValueError, SyntaxError):
+                kind = krepr
+            dq = deque(maxlen=h.capacity)
+            dq.extend((float(s), float(r)) for s, r in obs)
+            h._hist[kind] = dq
+        return h
 
     def __len__(self) -> int:
         with self._lock:

@@ -33,9 +33,15 @@ pipeline:
   prioritize-by-expected-effort argument from message scheduling to request
   admission (a cheap residual-at-admit score, calibrated by per-kind
   observed-rounds history, co-batches similar-effort requests so stragglers
-  stop pinning buckets of fast peers), and ``"windowed"`` trades a small
-  admission delay for fuller buckets (the p50-latency vs throughput knob).
-  See ``docs/admission.md``.
+  stop pinning buckets of fast peers), ``"windowed"`` trades a small
+  admission delay for fuller buckets (the p50-latency vs throughput knob),
+  and ``"deadline"`` is the SLA tier: per-request latency budgets from the
+  stream (``(rid, pgm, slo_s)`` triples), admission ordered by predicted
+  slack, multiple groups packed into free slots per cycle (``pick_many``),
+  and mid-flight eviction of requests whose residual decay says they will
+  not make their deadline -- evicted requests surface as
+  ``status="evicted"`` records with partial beliefs, never silently
+  dropped. See ``docs/admission.md``.
 - **threaded ingestion**: ``ingest_threads=N`` moves the stream pull onto
   feeder threads behind a bounded queue, so a source that blocks in
   ``__next__`` (a socket, a slow producer) no longer stalls device
@@ -75,10 +81,11 @@ from repro.core.graph import NEG_INF, PGM, pad_pgm_arrays
 from repro.core.registry import Registry
 
 __all__ = ["ADMISSION_POLICIES", "AdmissionPolicy", "AsyncServeResult",
-           "AsyncServeStats", "FIFOAdmission", "RequestRecord",
-           "ResidualAdmission", "ServingPipeline", "WindowedAdmission",
-           "get_admission_policy", "list_admission_policies",
-           "register_admission_policy", "serve_async"]
+           "AsyncServeStats", "DeadlineAdmission", "FIFOAdmission",
+           "RequestRecord", "ResidualAdmission", "ServingPipeline",
+           "SweepClock", "WindowedAdmission", "get_admission_policy",
+           "list_admission_policies", "register_admission_policy",
+           "serve_async"]
 
 
 # --------------------------------------------------------------- records --
@@ -89,21 +96,52 @@ class RequestRecord:
 
     ``t_enqueue`` is when the request was pulled from the stream (queue-in),
     ``t_admit`` when it was loaded into a resident bucket slot, ``t_done``
-    when its result was released after a chunk sync (``perf_counter``
-    seconds; the result's arrays may still be materializing -- release is
-    dispatch, not blocking). ``latency_s`` is the serving metric: queue-in
-    to result release."""
+    when its result was released after a chunk sync (pipeline-clock
+    seconds, ``perf_counter`` by default; the result's arrays may still be
+    materializing -- release is dispatch, not blocking). ``latency_s`` is
+    the serving metric: queue-in to result release.
+
+    ``status`` is ``"completed"`` for the normal release path and
+    ``"evicted"`` when the admission policy gave up on the request (the
+    ``deadline`` policy's hopeless-work call); an evicted record still
+    carries the request's *partial* result -- beliefs at the messages it
+    reached, ``converged=False`` -- never a silent drop. A request evicted
+    before it ever entered a bucket has ``t_admit == t_done`` (zero
+    service time) and prior beliefs. ``slo_s`` is the request's latency
+    budget from the stream (``None`` = no deadline)."""
 
     rid: int                    # input position (also the RNG fold_in index)
     result: BPResult
     t_enqueue: float
     t_admit: float
     t_done: float
+    slo_s: float | None = None
+    status: str = "completed"
 
     @property
     def latency_s(self) -> float:
         """Queue-in -> result-release latency, seconds."""
         return self.t_done - self.t_enqueue
+
+    @property
+    def evicted(self) -> bool:
+        """True when the policy gave up on this request before it finished
+        (``status == "evicted"``); the result is partial."""
+        return self.status == "evicted"
+
+    @property
+    def deadline(self) -> float | None:
+        """Absolute completion deadline in pipeline-clock seconds
+        (``t_enqueue + slo_s``), or ``None`` without an SLO."""
+        return None if self.slo_s is None else self.t_enqueue + self.slo_s
+
+    @property
+    def within_slo(self) -> bool:
+        """Did this request complete within its latency budget? Requests
+        without an SLO count as within; evicted ones never do."""
+        if self.status != "completed":
+            return False
+        return self.slo_s is None or self.latency_s <= self.slo_s
 
     @property
     def queue_s(self) -> float:
@@ -129,7 +167,14 @@ class AsyncServeStats(ServeStats):
     admission checks the policy deferred (a ``windowed`` policy holding a
     bucket open to fill it); ``admission_widths`` logs the width of every
     opened bucket (suppressed by ``record_events=False``), the direct
-    observable for the latency-vs-fullness tradeoff."""
+    observable for the latency-vs-fullness tradeoff.
+
+    Eviction accounting (the ``deadline`` policy's hopeless-work calls):
+    ``evictions`` counts requests released with ``status="evicted"``
+    (mid-flight *and* expired-while-staged), ``evicted_sweeps`` the device
+    sweeps those requests had consumed when given up on (a subset of
+    ``useful_sweeps`` -- work that ran but missed its SLO), and
+    ``eviction_log`` records ``(chunk index, rid)`` per event."""
 
     compactions: int = 0
     #: (chunk index, width before, width after) per compaction event
@@ -141,6 +186,11 @@ class AsyncServeStats(ServeStats):
     admission_holds: int = 0
     #: width of each opened bucket, in admission order
     admission_widths: List[int] = dataclasses.field(default_factory=list)
+    evictions: int = 0
+    evicted_sweeps: int = 0
+    #: (chunk index, rid) per eviction event
+    eviction_log: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)
 
 
 @dataclasses.dataclass
@@ -170,24 +220,32 @@ class AsyncServeResult:
 
     def latency_percentiles(
             self, qs: Sequence[float] = (50, 95, 99), *,
-            field: str = "latency") -> Dict[str, float]:
+            field: str = "latency",
+            status: str | None = None) -> Dict[str, float]:
         """Latency percentiles in ms, ``{"p50": ...}`` (NaN entries when no
-        requests were served). ``field`` selects the timeline component so
-        admission wait and device residency report separately instead of
-        conflated into one number: ``"latency"`` (queue-in -> result, the
-        end-to-end metric), ``"admission"`` (queue-in -> admit, the wait the
-        admission *policy* controls -- ``windowed`` trades it up, a hot
-        backfill path trades it down), or ``"service"`` (admit -> result,
-        the device-side residency time)."""
+        matching requests were served). ``field`` selects the timeline
+        component so admission wait and device residency report separately
+        instead of conflated into one number: ``"latency"`` (queue-in ->
+        result, the end-to-end metric), ``"admission"`` (queue-in -> admit,
+        the wait the admission *policy* controls -- ``windowed`` trades it
+        up, a hot backfill path trades it down), or ``"service"`` (admit ->
+        result, the device-side residency time). ``status`` filters the
+        records: ``"completed"`` / ``"evicted"`` / ``None`` (all). Once a
+        run evicts, the unfiltered number conflates a fast eviction with a
+        fast completion -- SLO reporting wants ``status="completed"``."""
         attrs = {"latency": "latency_s", "admission": "queue_s",
                  "service": "service_s"}
         if field not in attrs:
             raise KeyError(f"field must be one of {sorted(attrs)}, "
                            f"got {field!r}")
-        if not self.records:
+        if status not in (None, "completed", "evicted"):
+            raise ValueError("status must be None, 'completed' or 'evicted',"
+                             f" got {status!r}")
+        recs = self.records if status is None else \
+            [r for r in self.records if r.status == status]
+        if not recs:
             return {f"p{q:g}": float("nan") for q in qs}
-        lat = np.array([getattr(r, attrs[field])
-                        for r in self.records]) * 1e3
+        lat = np.array([getattr(r, attrs[field]) for r in recs]) * 1e3
         return {f"p{q:g}": float(np.percentile(lat, q)) for q in qs}
 
 
@@ -199,13 +257,18 @@ class _Staged:
     already ``device_put`` (the prefetch). ``score`` is the admission
     policy's effort estimate (0.0 under FIFO); ``passed_over`` counts takes
     that skipped this request while it was the queue head (the residual
-    policy's aging/no-starvation counter)."""
+    policy's aging/no-starvation counter); ``slo`` is the latency budget
+    the stream attached (seconds from ``t_enqueue``, ``None`` = no
+    deadline) and ``extra`` the policy's per-request feature tuple
+    (coupling stats, fed to the learned effort model)."""
     rid: int
     elem: PGM
     key: jax.Array
     t_enqueue: float
     score: float = 0.0
     passed_over: int = 0
+    slo: float | None = None
+    extra: Tuple[float, ...] = ()
 
 
 class _Group:
@@ -220,6 +283,16 @@ class _Group:
         self.queue: Deque[_Staged] = deque()
 
 
+@dataclasses.dataclass
+class _AdmitMeta:
+    """Host-side per-request metadata carried while resident in a slot."""
+    t_enqueue: float
+    t_admit: float
+    score: float
+    slo: float | None = None
+    extra: Tuple[float, ...] = ()
+
+
 @dataclasses.dataclass(eq=False)     # remove-by-identity from the slot list
 class _Slot:
     """One resident bucket: its group, engine state, and host-side caches
@@ -229,8 +302,8 @@ class _Slot:
     live: List[int | None]
     rounds_host: np.ndarray
     r_before: np.ndarray
-    #: rid -> (t_enqueue, t_admit, admission score)
-    meta: Dict[int, Tuple[float, float, float]]
+    #: rid -> admit-time metadata (enqueue/admit times, score, slo)
+    meta: Dict[int, _AdmitMeta]
 
     @property
     def width(self) -> int:
@@ -311,16 +384,36 @@ class AdmissionPolicy:
 
     - ``score(pgm, arrs, group)`` -- per-request effort estimate computed at
       staging time (``arrs`` are the padded numpy arrays, pre-``device_put``).
+    - ``features(pgm, arrs, group)`` -- extra per-request feature values
+      (coupling stats) for the learned effort model; default none.
     - ``ready(group, now)`` -- may a new bucket open from this group now?
       (``windowed`` answers no while it gathers a fuller bucket.)
     - ``pick_group(groups, now)`` -- which ready group admits when a slot
       frees; default is cross-group FIFO by oldest staged head, the
       no-starvation choice.
+    - ``pick_many(groups, now, free)`` -- slot packing: the groups to open
+      buckets from *this admission cycle*, up to ``free`` slots. The
+      default delegates to a single ``pick_group`` call (one group per
+      cycle iteration -- bitwise the legacy path); a packing policy returns
+      several at once so narrow co-arriving groups dispatch in the same
+      device cycle instead of across cycles.
     - ``take(group, width, slot=None)`` -- remove and return up to ``width``
       staged requests; ``slot`` is the resident bucket being backfilled
       (``None`` when opening a fresh bucket).
-    - ``observe(group, score, rounds)`` -- completion feedback: the rounds a
-      released request actually ran (feeds effort calibration).
+    - ``cull(group, now)`` -- staged requests to give up on *before*
+      admission (released as ``status="evicted"`` with prior beliefs);
+      default none. The deadline policy culls expired requests.
+    - ``should_evict(slot, rid, rounds, residual, now)`` -- mid-flight
+      eviction: called per live unfinished request after each chunk sync
+      (only when ``evicts`` is True) with its cumulative rounds and current
+      max residual; True releases it as ``status="evicted"`` with its
+      partial beliefs. Default never.
+    - ``observe(group, score, rounds, service_s=...)`` -- completion
+      feedback: the rounds a released request actually ran and its wall
+      service time (feeds effort + pace calibration). Not called for
+      evicted requests (their rounds are not a convergence count).
+    - ``forget(rid)`` -- the request left its slot (released or evicted);
+      drop any per-rid tracking state.
     - ``pull_bonus()`` -- extra requests the host should pull beyond
       ``prefetch`` (``windowed`` raises it to fill a held bucket).
     - ``wait_hint(groups, now)`` -- seconds the drive loop may sleep when
@@ -328,6 +421,10 @@ class AdmissionPolicy:
     """
 
     name = "base"
+    #: policies that may evict (mid-flight or staged) set this True; the
+    #: pipeline then fetches per-graph residuals at each sync and runs the
+    #: cull/should_evict hooks (False skips that work entirely).
+    evicts = False
 
     def __init__(self):
         self.pipeline: "ServingPipeline | None" = None
@@ -353,6 +450,12 @@ class AdmissionPolicy:
         """Effort estimate for one staged request; FIFO scores nothing."""
         return 0.0
 
+    def features(self, pgm: PGM, arrs: Mapping[str, np.ndarray],
+                 group: _Group) -> Tuple[float, ...]:
+        """Extra per-request feature values for the learned effort model
+        (coupling stats); the base policy computes none."""
+        return ()
+
     def ready(self, group: _Group, now: float) -> bool:
         """May a fresh bucket open from ``group`` now? FIFO: always."""
         return True
@@ -364,6 +467,16 @@ class AdmissionPolicy:
         ready = [g for g in groups if g.queue and self.ready(g, now)]
         return min(ready, key=lambda g: g.queue[0].t_enqueue, default=None)
 
+    def pick_many(self, groups: Iterable[_Group], now: float,
+                  free: int) -> "List[_Group]":
+        """The groups to open buckets from this admission cycle (at most
+        ``free``, one bucket each). The default delegates to a single
+        :meth:`pick_group` call -- exactly the legacy one-group-per-cycle
+        admission, so every non-packing policy keeps its bitwise behavior;
+        packing policies override to fill several free slots at once."""
+        g = self.pick_group(groups, now)
+        return [] if g is None else [g]
+
     def take(self, group: _Group, width: int,
              slot: "_Slot | None" = None) -> List[_Staged]:
         """Remove and return up to ``width`` staged requests from
@@ -371,8 +484,26 @@ class AdmissionPolicy:
         return [group.queue.popleft()
                 for _ in range(min(width, len(group.queue)))]
 
-    def observe(self, group: _Group, score: float, rounds: int) -> None:
+    def cull(self, group: _Group, now: float) -> List[_Staged]:
+        """Remove and return staged requests to give up on before they are
+        ever admitted (the deadline policy's expired-in-queue path); the
+        base policy never culls."""
+        return []
+
+    def should_evict(self, slot: _Slot, rid: int, rounds: int,
+                     residual: float, now: float) -> bool:
+        """Mid-flight eviction decision for one live unfinished request
+        (called per chunk sync, only when ``evicts``); the base policy
+        never evicts."""
+        return False
+
+    def observe(self, group: _Group, score: float, rounds: int,
+                service_s: float = 0.0,
+                extra: Tuple[float, ...] = ()) -> None:
         """Completion feedback for one released request; FIFO ignores it."""
+
+    def forget(self, rid: int) -> None:
+        """Request ``rid`` left its slot; drop any per-rid tracking."""
 
     def pull_bonus(self) -> int:
         """Extra pull target beyond ``prefetch`` (0 for FIFO)."""
@@ -441,10 +572,12 @@ class ResidualAdmission(AdmissionPolicy):
         return _residual_at_admit(arrs)
 
     def expected(self, group: _Group, score: float) -> float:
-        """Expected rounds for an admission score: the per-kind history's
-        nearest observation, or the raw score before any feedback."""
-        est = self.history.expect(group.ceilings, score)
-        return float(score) if est is None else est
+        """Expected rounds for an admission score: the history's prediction
+        (learned ridge model by default, see
+        :class:`~repro.core.batch.RoundsHistory`), falling back to the raw
+        score before any feedback exists."""
+        return self.history.expect(group.ceilings, score,
+                                   default=float(score))
 
     def take(self, group: _Group, width: int,
              slot: "_Slot | None" = None) -> List[_Staged]:
@@ -461,7 +594,7 @@ class ResidualAdmission(AdmissionPolicy):
         anchor = None
         forced = head.passed_over >= self.aging
         if slot is not None and not forced:
-            live = [self.expected(group, slot.meta[r][2])
+            live = [self.expected(group, slot.meta[r].score)
                     for r in slot.live if r is not None]
             if live:
                 anchor = sum(live) / len(live)
@@ -482,8 +615,10 @@ class ResidualAdmission(AdmissionPolicy):
         q.extend(kept)
         return chosen
 
-    def observe(self, group: _Group, score: float, rounds: int) -> None:
-        self.history.observe(group.ceilings, score, rounds)
+    def observe(self, group: _Group, score: float, rounds: int,
+                service_s: float = 0.0,
+                extra: Tuple[float, ...] = ()) -> None:
+        self.history.observe(group.ceilings, score, rounds, extra=extra)
 
 
 class WindowedAdmission(AdmissionPolicy):
@@ -548,6 +683,267 @@ class WindowedAdmission(AdmissionPolicy):
         return min(rem) if rem else 0.0
 
 
+def _coupling_stats(arrs: Mapping[str, np.ndarray]) -> Tuple[float, float]:
+    """(mean, std) of |log pairwise potential| over real edge entries --
+    the coupling-strength features the learned effort model regresses on
+    (strong coupling correlates with slow convergence). Numpy on the
+    staging path, same rationale as ``_residual_at_admit``."""
+    lpe = np.asarray(arrs["log_psi_e"])                 # (E, S, S)
+    emask = np.asarray(arrs["edge_mask"]).astype(bool)
+    if not emask.any():
+        return (0.0, 0.0)
+    mag = np.abs(np.where(np.isfinite(lpe), lpe, 0.0))[emask]
+    return (float(mag.mean()), float(mag.std()))
+
+
+class SweepClock:
+    """Deterministic virtual clock for SLA tests and benches: time is
+    *device sweeps*, not wall seconds.
+
+    Inject as ``ServingPipeline(clock=...)``: the pipeline reads ``now``
+    via ``clock()`` and, because this class defines ``on_chunk``, advances
+    it by ``tau`` virtual seconds per device sweep at every chunk sync.
+    Requests staged up front at t=0 with SLOs in sweep units then make the
+    whole deadline/eviction/attainment story a pure function of scheduling
+    decisions -- identical on any machine, never sleeping on wall time.
+    ``advance`` lets a test move time by hand (arrival processes)."""
+
+    def __init__(self, tau: float = 1.0):
+        if tau <= 0:
+            raise ValueError(f"tau must be > 0, got {tau}")
+        self.t = 0.0
+        self.tau = float(tau)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def on_chunk(self, sweeps: int) -> None:
+        """Pipeline hook: one chunk of ``sweeps`` device sweeps completed."""
+        self.t += float(sweeps) * self.tau
+
+    def advance(self, dt: float) -> None:
+        """Move virtual time forward by ``dt`` seconds (manual control)."""
+        self.t += float(dt)
+
+
+class DeadlineAdmission(AdmissionPolicy):
+    """SLA-aware admission: earliest-predicted-slack ordering, slot
+    packing, and eviction of work that will not make its deadline.
+
+    Requests carry a latency budget from the stream (``(rid, pgm, slo_s)``
+    items, or ``default_slo``); *slack* is ``deadline - now - predicted
+    service time``, with service predicted as the learned
+    :class:`~repro.core.batch.RoundsHistory` rounds estimate times an
+    EWMA-calibrated seconds-per-round pace per shape family. Three
+    decisions follow:
+
+    - **Admission order** (``take`` / ``pick_group``): least slack first --
+      EDF generalized by predicted effort, so a lax request yields to an
+      urgent one even when it arrived earlier. Requests without a deadline
+      have infinite slack and order last; the same aging counter as
+      ``residual`` force-admits a head skipped ``aging`` times, so they
+      cannot starve under a sustained deadlined stream.
+    - **Slot packing** (``pick_many``): fill *all* free slots in one
+      admission cycle with the most-urgent distinct groups, so co-arriving
+      narrow shape families dispatch in the same device cycle instead of
+      serializing one per cycle.
+    - **Eviction** (``should_evict`` / ``cull``): after each chunk sync the
+      per-graph ``BPState`` residual gives the converging-too-slowly
+      signal. A live request is hopeless when its deadline already passed,
+      or when the observed residual decay rate (log-residual per round,
+      the faster of last-interval and whole-trajectory slope, judged
+      after ``grace`` syncs) projects convergence to
+      ``eps`` past its deadline -- it is then released immediately as
+      ``status="evicted"`` with its partial beliefs, freeing the slot for
+      work that can still make its SLO. ``cull`` likewise gives up on
+      staged requests whose deadline expired while queued (prior beliefs,
+      zero service). ``evict=False`` keeps slack ordering but never gives
+      up on work.
+
+    ``safety`` scales the projected remaining time before comparing
+    against the deadline (>1 = evict earlier); ``min_rate`` is the decay
+    rate below which a request counts as stalled (projected never).
+    ``history`` may be shared across pipelines (the router tier pools it),
+    exactly as with ``residual``."""
+
+    name = "deadline"
+
+    def __init__(self, default_slo: float | None = None,
+                 safety: float = 1.0, grace: int = 2,
+                 min_rate: float = 1e-4, evict: bool = True,
+                 pack: bool = True, aging: int = 16,
+                 history_capacity: int = 64,
+                 history: RoundsHistory | None = None):
+        super().__init__()
+        if default_slo is not None and default_slo < 0:
+            raise ValueError(f"default_slo must be >= 0, got {default_slo}")
+        if grace < 1:
+            raise ValueError(f"grace must be >= 1, got {grace}")
+        if aging < 1:
+            raise ValueError(f"aging must be >= 1, got {aging}")
+        self.default_slo = default_slo
+        self.safety = float(safety)
+        self.grace = grace
+        self.min_rate = float(min_rate)
+        self.evicts = bool(evict)
+        self.pack = bool(pack)
+        self.aging = aging
+        self.history = history if history is not None \
+            else RoundsHistory(capacity=history_capacity)
+        self._pace: Dict[tuple, float] = {}     # kind -> EWMA sec/round
+        self._pace_all: float | None = None
+        #: rid -> (rounds, log residual, syncs seen, first-sync rounds,
+        #: first-sync log residual) as of the last chunk sync
+        self._track: Dict[int, Tuple[int, float, int, int, float]] = {}
+
+    # -- scoring / features ------------------------------------------------
+
+    def score(self, pgm: PGM, arrs: Mapping[str, np.ndarray],
+              group: _Group) -> float:
+        return _residual_at_admit(arrs)
+
+    def features(self, pgm: PGM, arrs: Mapping[str, np.ndarray],
+                 group: _Group) -> Tuple[float, ...]:
+        return _coupling_stats(arrs)
+
+    # -- slack -------------------------------------------------------------
+
+    def _slo_of(self, staged: _Staged) -> float | None:
+        return staged.slo if staged.slo is not None else self.default_slo
+
+    def _deadline(self, staged: _Staged) -> float | None:
+        slo = self._slo_of(staged)
+        return None if slo is None else staged.t_enqueue + slo
+
+    def _pace_of(self, ceilings: tuple) -> float:
+        pace = self._pace.get(ceilings, self._pace_all)
+        return 0.0 if pace is None else pace
+
+    def slack(self, group: _Group, staged: _Staged, now: float) -> float:
+        """Predicted slack seconds: time to deadline minus predicted
+        service (expected rounds x calibrated pace). Infinite without a
+        deadline; cold pace predicts zero service (pure EDF)."""
+        deadline = self._deadline(staged)
+        if deadline is None:
+            return float("inf")
+        est = self.history.expect(group.ceilings, staged.score,
+                                  default=0.0, extra=staged.extra)
+        return deadline - now - est * self._pace_of(group.ceilings)
+
+    def _urgency(self, group: _Group, now: float) -> float:
+        return min(self.slack(group, s, now) for s in group.queue)
+
+    # -- admission ---------------------------------------------------------
+
+    def pick_group(self, groups: Iterable[_Group], now: float):
+        ready = [g for g in groups if g.queue and self.ready(g, now)]
+        return min(ready, key=lambda g: (self._urgency(g, now),
+                                         g.queue[0].t_enqueue, g.ceilings),
+                   default=None)
+
+    def pick_many(self, groups: Iterable[_Group], now: float,
+                  free: int) -> List[_Group]:
+        if not self.pack:
+            return super().pick_many(groups, now, free)
+        ready = [g for g in groups if g.queue and self.ready(g, now)]
+        ready.sort(key=lambda g: (self._urgency(g, now),
+                                  g.queue[0].t_enqueue, g.ceilings))
+        return ready[:free]
+
+    def take(self, group: _Group, width: int,
+             slot: "_Slot | None" = None) -> List[_Staged]:
+        q = group.queue
+        width = min(width, len(q))
+        if width == 0:
+            return []
+        now = self.pipeline.clock() if self.pipeline is not None else 0.0
+        order = sorted(range(len(q)),
+                       key=lambda i: (self.slack(group, q[i], now),
+                                      q[i].t_enqueue, q[i].rid))
+        pick = set(order[:width])
+        head = q[0]
+        if 0 not in pick:
+            if head.passed_over >= self.aging:      # aged: force-admit
+                pick.remove(order[width - 1])
+                pick.add(0)
+            else:
+                head.passed_over += 1
+        chosen = [q[i] for i in sorted(pick)]
+        kept = [s for i, s in enumerate(q) if i not in pick]
+        q.clear()
+        q.extend(kept)
+        return chosen
+
+    def cull(self, group: _Group, now: float) -> List[_Staged]:
+        if not self.evicts:
+            return []
+        expired = [s for s in group.queue
+                   if (d := self._deadline(s)) is not None and now >= d]
+        if expired:
+            gone = set(id(s) for s in expired)
+            kept = [s for s in group.queue if id(s) not in gone]
+            group.queue.clear()
+            group.queue.extend(kept)
+        return expired
+
+    # -- eviction ----------------------------------------------------------
+
+    def should_evict(self, slot: _Slot, rid: int, rounds: int,
+                     residual: float, now: float) -> bool:
+        meta = slot.meta[rid]
+        slo = meta.slo if meta.slo is not None else self.default_slo
+        if slo is None:
+            return False
+        eps = self.pipeline.engine.config.eps \
+            if self.pipeline is not None else 1e-3
+        if residual <= eps:
+            return False                # converged: releases on this sync
+        deadline = meta.t_enqueue + slo
+        if now >= deadline:
+            return True                 # already missed: stop burning sweeps
+        logr = float(np.log(max(residual, 1e-300)))
+        prev = self._track.get(rid)
+        if prev is None:
+            self._track[rid] = (rounds, logr, 1, rounds, logr)
+            return False                # need a trajectory before judging
+        rounds_prev, logr_prev, syncs, r0, logr0 = prev
+        self._track[rid] = (rounds, logr, syncs + 1, r0, logr0)
+        if syncs + 1 < self.grace:
+            return False
+        dr = rounds - rounds_prev
+        if dr <= 0:
+            return False
+        # Residual decay is non-monotone: a transient plateau in the last
+        # interval must not doom a request whose whole-trajectory slope is
+        # healthy, so project with the more optimistic of the two rates.
+        rate = (logr_prev - logr) / dr  # log-residual decay per round
+        if rounds > r0:
+            rate = max(rate, (logr0 - logr) / (rounds - r0))
+        if rate <= self.min_rate:       # stalled / diverging: never makes it
+            return True
+        est_rounds = (logr - float(np.log(eps))) / rate
+        eta = now + self.safety * est_rounds * self._pace_of(
+            slot.group.ceilings)
+        return eta > deadline
+
+    # -- feedback ----------------------------------------------------------
+
+    def observe(self, group: _Group, score: float, rounds: int,
+                service_s: float = 0.0,
+                extra: Tuple[float, ...] = ()) -> None:
+        self.history.observe(group.ceilings, score, rounds, extra=extra)
+        if rounds > 0 and service_s > 0:
+            pace = service_s / rounds
+            old = self._pace.get(group.ceilings)
+            self._pace[group.ceilings] = pace if old is None \
+                else 0.5 * old + 0.5 * pace
+            self._pace_all = pace if self._pace_all is None \
+                else 0.5 * self._pace_all + 0.5 * pace
+
+    def forget(self, rid: int) -> None:
+        self._track.pop(rid, None)
+
+
 #: name -> AdmissionPolicy class; names are the canonical serialized form
 #: (``BPConfig(admission=...)`` / ``serve_async(admission=...)``). A
 #: ``Registry`` (dict subclass): plain-dict reads keep working.
@@ -555,6 +951,7 @@ ADMISSION_POLICIES: Registry[type] = Registry("admission policy", {
     "fifo": FIFOAdmission,
     "residual": ResidualAdmission,
     "windowed": WindowedAdmission,
+    "deadline": DeadlineAdmission,
 })
 
 
@@ -609,8 +1006,10 @@ class _IngestFeeder:
     re-checking the stop flag, so a worker blocked on a full queue exits
     promptly instead of pinning the source forever."""
 
-    def __init__(self, it: Iterator, threads: int, maxsize: int):
+    def __init__(self, it: Iterator, threads: int, maxsize: int,
+                 clock=time.perf_counter):
         self._it = it
+        self._clock = clock
         self._lock = threading.Lock()
         self._q: _queue.Queue = _queue.Queue(maxsize=max(1, maxsize))
         self._n = 0
@@ -646,7 +1045,7 @@ class _IngestFeeder:
                     self._error = e
                     break
                 rid, self._n = self._n, self._n + 1
-                t = time.perf_counter()
+                t = self._clock()
             if not self._put((rid, item, t)):  # blocks when full: the bound
                 return
         self._put(_FEEDER_DONE)
@@ -716,8 +1115,15 @@ class ServingPipeline:
     compat path) -- without it each request pads to its own deterministic
     ``bucket_shape`` ceilings, the online policy.
 
-    The stream may yield ``PGM``s (rid = arrival order) or explicit
-    ``(rid, PGM)`` pairs. Per-request RNG keys are ``fold_in(rng, rid)``,
+    The stream may yield ``PGM``s (rid = arrival order), explicit
+    ``(rid, PGM)`` pairs, or ``(rid, PGM, slo_s)`` triples attaching a
+    latency budget (seconds from enqueue; ``rid=None`` keeps arrival-order
+    rids) that deadline-aware policies read and every ``RequestRecord``
+    reports via ``within_slo``. ``clock`` replaces the pipeline's time
+    source (default ``time.perf_counter``) -- inject a
+    :class:`SweepClock` for deterministic virtual-time tests/benches; a
+    clock exposing ``on_chunk(sweeps)`` is advanced by the pipeline at
+    every chunk sync. Per-request RNG keys are ``fold_in(rng, rid)``,
     so results are independent of every pipeline knob -- admission policy
     included; only the *padded shape* policy (plan vs online) can alter
     stochastic-scheduler trajectories, the caveat shared with ``run_many``.
@@ -742,7 +1148,8 @@ class ServingPipeline:
                  admission: "str | AdmissionPolicy | None" = None,
                  admission_kwargs: Mapping | None = None,
                  ingest_threads: int = 0,
-                 ingest_queue: int | None = None):
+                 ingest_queue: int | None = None,
+                 clock=None):
         if engine.is_serial:
             raise NotImplementedError(
                 "serving needs a frontier scheduler (srbp is host-serial)")
@@ -768,6 +1175,8 @@ class ServingPipeline:
         self.plan = plan
         self.ingest_threads = ingest_threads
         self.ingest_queue = ingest_queue
+        self.clock = clock if clock is not None else time.perf_counter
+        self._clock_on_chunk = getattr(self.clock, "on_chunk", None)
         if admission is None:
             admission = getattr(cfg, "admission", "fifo")
             if admission_kwargs is None:
@@ -800,7 +1209,8 @@ class ServingPipeline:
             group = self._groups[key] = _Group(ceilings)
         return group
 
-    def _stage(self, rid: int, pgm: PGM, t_enqueue: float) -> None:
+    def _stage(self, rid: int, pgm: PGM, t_enqueue: float,
+               slo: float | None = None) -> None:
         if self._explicit_rids:         # rid = RNG fold_in index: must be 1:1
             if rid in self._seen_rids:
                 raise ValueError(f"duplicate request id {rid} in stream")
@@ -809,12 +1219,13 @@ class ServingPipeline:
         e, v, s, re_, rv = group.ceilings
         arrs = pad_pgm_arrays(pgm, n_edges=e, n_vertices=v, n_states=s)
         score = self.policy.score(pgm, arrs, group)
+        extra = tuple(self.policy.features(pgm, arrs, group))
         # The prefetch: H2D starts now, overlapped with device compute.
         elem = PGM(n_real_vertices=rv, n_real_edges=re_,
                    **jax.device_put(arrs))
         group.queue.append(_Staged(
             rid, elem, jax.random.fold_in(self.rng, rid), t_enqueue,
-            score=score))
+            score=score, slo=slo, extra=extra))
         self.stats.staged += 1
 
     def _staged_count(self) -> int:
@@ -841,15 +1252,23 @@ class ServingPipeline:
                 except StopIteration:
                     self._exhausted = True
                     return
-                t = time.perf_counter()
+                t = self.clock()
                 rid_auto = self._arrival
+            slo = None
             if isinstance(item, tuple):
-                rid, pgm = item
-                self._explicit_rids = True
+                if len(item) == 3:
+                    rid, pgm, slo = item
+                    slo = None if slo is None else float(slo)
+                else:
+                    rid, pgm = item
+                if rid is None:         # keep arrival-order rid assignment
+                    rid = rid_auto
+                else:
+                    self._explicit_rids = True
             else:
                 rid, pgm = rid_auto, item
             self._arrival += 1
-            self._stage(int(rid), pgm, t)
+            self._stage(int(rid), pgm, t, slo=slo)
 
     # -- slot lifecycle ----------------------------------------------------
 
@@ -863,7 +1282,7 @@ class ServingPipeline:
             lambda *xs: jnp.stack(xs), *[s.elem for s in take]))
         keys = jnp.stack([s.key for s in take])
         state = self.engine.init(batch, keys)
-        t = time.perf_counter()
+        t = self.clock()
         self.stats.buckets_opened += 1
         if self.record_events:
             self.stats.admission_widths.append(len(take))
@@ -871,7 +1290,9 @@ class ServingPipeline:
                      live=[s.rid for s in take],
                      rounds_host=np.zeros(len(take), np.int64),
                      r_before=np.zeros(len(take), np.int64),
-                     meta={s.rid: (s.t_enqueue, t, s.score) for s in take})
+                     meta={s.rid: _AdmitMeta(s.t_enqueue, t, s.score,
+                                             slo=s.slo, extra=s.extra)
+                           for s in take})
 
     def _release(self, slot: _Slot, j: int, rounds: int) -> RequestRecord:
         rid = slot.live[j]
@@ -881,10 +1302,85 @@ class ServingPipeline:
         self.stats.evacuated += 1
         if self.record_events:      # O(requests) log; off for infinite streams
             self.stats.evacuation_log.append((self.stats.chunks, rid))
-        t_enq, t_adm, score = slot.meta.pop(rid)
-        self.policy.observe(slot.group, score, rounds)
-        return RequestRecord(rid=rid, result=result, t_enqueue=t_enq,
-                             t_admit=t_adm, t_done=time.perf_counter())
+        meta = slot.meta.pop(rid)
+        t_done = self.clock()
+        self.policy.observe(slot.group, meta.score, rounds,
+                            service_s=max(t_done - meta.t_admit, 0.0),
+                            extra=meta.extra)
+        self.policy.forget(rid)
+        return RequestRecord(rid=rid, result=result,
+                             t_enqueue=meta.t_enqueue,
+                             t_admit=meta.t_admit, t_done=t_done,
+                             slo_s=meta.slo)
+
+    def _evict(self, slot: _Slot, j: int, rounds: int) -> RequestRecord:
+        """Release batch slot ``j`` as *evicted*: the partial beliefs at
+        the last chunk sync, ``status="evicted"``, sweep accounting under
+        ``evicted_sweeps``. The policy is not ``observe``d -- an evicted
+        round count is a truncation artifact, not a convergence effort
+        sample -- but its per-rid tracking is dropped via ``forget``."""
+        rid = slot.live[j]
+        assert rid is not None
+        result = self.engine._slice_result(slot.state, j)
+        slot.live[j] = None
+        self.stats.evacuated += 1
+        self.stats.evictions += 1
+        self.stats.evicted_sweeps += rounds
+        if self.record_events:
+            self.stats.eviction_log.append((self.stats.chunks, rid))
+        meta = slot.meta.pop(rid)
+        self.policy.forget(rid)
+        return RequestRecord(rid=rid, result=result,
+                             t_enqueue=meta.t_enqueue,
+                             t_admit=meta.t_admit, t_done=self.clock(),
+                             slo_s=meta.slo, status="evicted")
+
+    def _evict_staged(self, group: _Group,
+                      staged: _Staged) -> RequestRecord:
+        """Give up on a request whose deadline expired while queued: zero
+        service, prior beliefs (the BP fixed point of zero rounds --
+        normalized unary potentials, since uniform initial messages cancel
+        in per-vertex normalization), ``status="evicted"``."""
+        lpv = np.asarray(staged.elem.log_psi_v)                # (V, S)
+        smask = np.asarray(staged.elem.state_mask).astype(bool)
+        x = np.where(smask, lpv, NEG_INF)
+        m = np.maximum(x.max(axis=1, keepdims=True), NEG_INF)
+        z = m + np.log(np.maximum(
+            np.where(smask, np.exp(x - m), 0.0).sum(axis=1, keepdims=True),
+            1e-38))
+        beliefs = jnp.asarray(np.where(smask, x - z, NEG_INF),
+                              dtype=jnp.float32)
+        dst = np.asarray(staged.elem.edge_dst)
+        n_states = np.asarray(staged.elem.n_states).astype(np.float64)
+        logm = jnp.asarray(                 # the round-0 uniform messages
+            np.where(smask[dst], -np.log(n_states[dst])[:, None], NEG_INF),
+            dtype=jnp.float32)
+        cfg = self.engine.config
+        hist = jnp.full((cfg.max_rounds if cfg.history else 1,), -1,
+                        jnp.int32)
+        result = BPResult(
+            beliefs=beliefs, logm=logm,
+            rounds=jnp.int32(0), updates=jnp.uint32(0),
+            converged=jnp.asarray(False),
+            max_residual=jnp.float32(staged.score),
+            unconverged_history=hist, sched_state=None)
+        self.stats.evictions += 1
+        if self.record_events:
+            self.stats.eviction_log.append((self.stats.chunks, staged.rid))
+        t = self.clock()
+        self.policy.forget(staged.rid)
+        return RequestRecord(rid=staged.rid, result=result,
+                             t_enqueue=staged.t_enqueue,
+                             t_admit=t, t_done=t,
+                             slo_s=staged.slo, status="evicted")
+
+    def _cull(self) -> Iterator[RequestRecord]:
+        """Ask the policy for staged requests to give up on (expired
+        deadlines) and release them with prior beliefs."""
+        now = self.clock()
+        for group in self._groups.values():
+            for staged in self.policy.cull(group, now):
+                yield self._evict_staged(group, staged)
 
     def _backfill(self, slot: _Slot, j: int) -> None:
         staged = self.policy.take(slot.group, 1, slot=slot)[0]
@@ -892,8 +1388,9 @@ class ServingPipeline:
                                 staged.key, scheduler=self.engine.scheduler)
         slot.live[j] = staged.rid
         slot.rounds_host[j] = 0
-        slot.meta[staged.rid] = (staged.t_enqueue, time.perf_counter(),
-                                 staged.score)
+        slot.meta[staged.rid] = _AdmitMeta(staged.t_enqueue, self.clock(),
+                                           staged.score, slo=staged.slo,
+                                           extra=staged.extra)
         self.stats.backfilled += 1
 
     def _maybe_compact(self, slot: _Slot) -> None:
@@ -932,11 +1429,14 @@ class ServingPipeline:
         max_rounds = self.engine.config.max_rounds
         inner = self.engine.scheduler.inner_sweeps
         self.stats.chunks += 1
-        self.stats.device_sweeps += int(state.chunk_iters) * inner * slot.width
+        chunk_sweeps = int(state.chunk_iters) * inner * slot.width
+        self.stats.device_sweeps += chunk_sweeps
         self.stats.useful_sweeps += int(sum(
             int(r_after[j] - slot.r_before[j])
             for j in range(slot.width) if slot.live[j] is not None))
         slot.rounds_host = r_after.copy()
+        if self._clock_on_chunk is not None:   # virtual clocks tick in sweeps
+            self._clock_on_chunk(chunk_sweeps)
         if not self.evacuate:
             # Run-to-completion baseline: release everything only when the
             # whole bucket is finished; never backfill, never compact.
@@ -952,6 +1452,21 @@ class ServingPipeline:
                 yield self._release(slot, j, int(r_after[j]))
                 if slot.group.queue:
                     self._backfill(slot, j)
+        if self.policy.evicts:
+            # Mid-flight eviction: per-graph residuals at this sync are the
+            # converging-too-slowly signal; hopeless requests release now
+            # (partial beliefs) instead of burning sweeps to max_rounds.
+            resid = np.asarray(jax.device_get(state.max_residual))
+            now = self.clock()
+            for j in range(slot.width):
+                rid = slot.live[j]
+                if rid is None:
+                    continue
+                if self.policy.should_evict(slot, rid, int(r_after[j]),
+                                            float(resid[j]), now):
+                    yield self._evict(slot, j, int(r_after[j]))
+                    if slot.group.queue:
+                        self._backfill(slot, j)
         # Slots that went dead while the queue was momentarily empty are
         # revived by later arrivals -- without this, an online straggler
         # bucket would burn dead-slot sweeps while new same-shape requests
@@ -967,8 +1482,7 @@ class ServingPipeline:
         """The group the admission policy would open a bucket from now
         (cross-group FIFO under the default policies, so a minority shape
         family cannot starve behind a sustained majority one)."""
-        return self.policy.pick_group(self._groups.values(),
-                                      time.perf_counter())
+        return self.policy.pick_group(self._groups.values(), self.clock())
 
     def _await_work(self, it) -> bool:
         """Nothing is resident: wait until something becomes admissible.
@@ -986,8 +1500,7 @@ class ServingPipeline:
         target = before + self.policy.pull_bonus()
         if target > before:
             self._pump(it, target)
-        hint = self.policy.wait_hint(self._groups.values(),
-                                     time.perf_counter())
+        hint = self.policy.wait_hint(self._groups.values(), self.clock())
         if self._staged_count() == before and hint > 0:
             time.sleep(min(hint, 0.05))
         return True
@@ -1010,7 +1523,8 @@ class ServingPipeline:
         if self.ingest_threads:
             bound = self.ingest_queue or max(self.prefetch or 8,
                                              2 * self.ingest_threads)
-            it = self._feeder = _IngestFeeder(it, self.ingest_threads, bound)
+            it = self._feeder = _IngestFeeder(it, self.ingest_threads, bound,
+                                              clock=self.clock)
         try:
             yield from self._drive(it)
         finally:
@@ -1047,17 +1561,27 @@ class ServingPipeline:
         if self.prefetch is None:
             self._pump(it, float("inf"), block=True)
         while True:
+            yield from self._cull()     # expired-while-staged give-ups
             while len(resident) < self.slots:
-                group = self._admissible()
-                if group is None:
+                free = self.slots - len(resident)
+                picks = self.policy.pick_many(self._groups.values(),
+                                              self.clock(), free)
+                if not picks:
                     self._pump(it, max(1, self.prefetch or 1)
                                + self.policy.pull_bonus())
-                    group = self._admissible()
-                    if group is None:
+                    picks = self.policy.pick_many(self._groups.values(),
+                                                  self.clock(), free)
+                    if not picks:
                         if self._staged_count():   # held by an open window
                             self.stats.admission_holds += 1
                         break
-                resident.append(self._admit(group))
+                # The packing path: fill every free slot this cycle from
+                # the policy's ranked groups. The default pick_many returns
+                # one group, reproducing the legacy one-admit-per-iteration
+                # cadence (and its pump interleaving) exactly.
+                for group in picks[:free]:
+                    if group.queue:
+                        resident.append(self._admit(group))
             if not resident:
                 if not self._await_work(it):
                     return
@@ -1108,7 +1632,8 @@ def serve_async(engine: BPEngine, stream, rng: jax.Array, *,
                 admission: "str | AdmissionPolicy | None" = None,
                 admission_kwargs: Mapping | None = None,
                 ingest_threads: int = 0,
-                ingest_queue: int | None = None) -> AsyncServeResult:
+                ingest_queue: int | None = None,
+                clock=None) -> AsyncServeResult:
     """Serve a request stream through the asynchronous pipeline.
 
     ``stream`` is either a materialized ``Sequence[PGM]`` -- padded with the
@@ -1116,15 +1641,23 @@ def serve_async(engine: BPEngine, stream, rng: jax.Array, *,
     identical* to ``BPEngine.serve`` on the same inputs -- or any iterator
     of PGMs (the online path: each request pads to its deterministic
     ``bucket_shape`` ceilings the moment it arrives, no global knowledge
-    needed). ``admission``/``admission_kwargs`` select the admission policy
-    (``"fifo"`` | ``"residual"`` | ``"windowed"``; ``None`` defers to the
-    engine's ``BPConfig.admission``) and ``ingest_threads``/``ingest_queue``
-    enable the threaded ingestion feeder -- see :class:`ServingPipeline`
-    and ``docs/admission.md``. This wrapper just collects the generator
-    into an :class:`AsyncServeResult` (records in completion order,
-    ``.results`` in input order)."""
+    needed). Iterator items may also be ``(rid, PGM)`` pairs or
+    ``(rid, PGM, slo_s)`` deadline triples -- see :class:`ServingPipeline`.
+    ``admission``/``admission_kwargs`` select the admission policy
+    (``"fifo"`` | ``"residual"`` | ``"windowed"`` | ``"deadline"``;
+    ``None`` defers to the engine's ``BPConfig.admission``),
+    ``ingest_threads``/``ingest_queue`` enable the threaded ingestion
+    feeder, and ``clock`` injects a virtual time source (a
+    :class:`SweepClock` makes SLA behavior deterministic) -- see
+    :class:`ServingPipeline` and ``docs/admission.md``. This wrapper just
+    collects the generator into an :class:`AsyncServeResult` (records in
+    completion order, ``.results`` in input order)."""
     plan = None
-    if isinstance(stream, Sequence):
+    # Only a sequence of bare PGMs takes the materialized-plan path:
+    # (rid, pgm[, slo]) tuple sequences keep their explicit rids (the plan
+    # would renumber them by position) and stream online.
+    if isinstance(stream, Sequence) and (
+            not stream or isinstance(stream[0], PGM)):
         plan, stream = _materialized_plan(list(stream), growth)
     pipe = ServingPipeline(engine, rng, growth=growth, max_batch=max_batch,
                            chunk_rounds=chunk_rounds, evacuate=evacuate,
@@ -1133,6 +1666,6 @@ def serve_async(engine: BPEngine, stream, rng: jax.Array, *,
                            admission=admission,
                            admission_kwargs=admission_kwargs,
                            ingest_threads=ingest_threads,
-                           ingest_queue=ingest_queue)
+                           ingest_queue=ingest_queue, clock=clock)
     records = list(pipe.serve(stream))
     return AsyncServeResult(records=records, stats=pipe.stats)

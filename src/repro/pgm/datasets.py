@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator, List, Sequence, Tuple
+from typing import Iterator, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
@@ -482,8 +482,9 @@ _ZOO_VARIANTS: Tuple[Tuple[str, dict], ...] = (
 
 
 def zoo_stream(n: int, *, seed: int = 0,
-               kinds: Sequence[str] | None = None
-               ) -> Iterator[Tuple[str, PGM]]:
+               kinds: Sequence[str] | None = None,
+               slos: "float | Mapping[str, float] | None" = None
+               ) -> Iterator[tuple]:
     """Yield ``n`` heterogeneous ``(kind, PGM)`` requests cycling the zoo.
 
     Kinds *and* sizes interleave (two size variants per kind, see
@@ -492,7 +493,14 @@ def zoo_stream(n: int, *, seed: int = 0,
     for. Deterministic: request ``i`` is generated with seed
     ``1000 * seed + i``, so two streams with equal ``(n, seed, kinds)``
     are identical graph for graph. ``kinds`` filters the table to a
-    subset (unknown names raise ``KeyError`` via the registry)."""
+    subset (unknown names raise ``KeyError`` via the registry).
+
+    ``slos`` attaches per-request latency budgets for the SLA serving
+    tier: a float applies one budget to everything, a mapping sets one
+    per kind (missing kinds get no deadline). Items then come as
+    ``(kind, PGM, slo_s)`` triples -- strip the kind and they feed
+    straight into the ``(rid, pgm, slo)``-aware serving stack as
+    ``(None, pgm, slo)``."""
     variants = _ZOO_VARIANTS
     if kinds is not None:
         for k in kinds:
@@ -502,4 +510,10 @@ def zoo_stream(n: int, *, seed: int = 0,
             raise ValueError(f"no zoo variants left after filtering {kinds}")
     for i in range(n):
         kind, kw = variants[i % len(variants)]
-        yield kind, WORKLOADS[kind](seed=1000 * seed + i, **kw)
+        pgm = WORKLOADS[kind](seed=1000 * seed + i, **kw)
+        if slos is None:
+            yield kind, pgm
+        elif isinstance(slos, Mapping):
+            yield kind, pgm, slos.get(kind)
+        else:
+            yield kind, pgm, float(slos)

@@ -15,7 +15,10 @@ Placement is a pluggable :class:`RoutingPolicy` (``ROUTING_POLICIES``, the
 fourth ``repro.core.registry.Registry`` family): ``round_robin`` (the
 determinism anchor), ``least_loaded`` (effort-weighted shortest queue, via
 the shared thread-safe ``RoundsHistory``), ``kind_affinity`` (sticky
-shape placement keeping jit caches hot per replica). Watermark-triggered
+shape placement keeping jit caches hot per replica), ``deadline``
+(deadline-aware least-loaded: SLO'd requests avoid replicas already
+holding urgent work -- pairs with the ``deadline`` admission policy,
+whose evictions surface in ``RoutedRecord.status``). Watermark-triggered
 **work stealing** rebalances skew at runtime: a replica whose pending work
 drains pulls a batch from the deepest peer's inbox tail. Both are
 bitwise-invisible in results -- a request's trajectory depends only on
@@ -30,14 +33,15 @@ Entry points: :func:`serve_routed` (collect everything), :class:`Router`
 from repro.serve.replica import Replica, ReplicaLoad, RoutedRecord
 from repro.serve.router import Router, RouterResult, RouterStats, \
     serve_routed
-from repro.serve.routing import (KindAffinityRouting, LeastLoadedRouting,
-                                 ROUTING_POLICIES, RoundRobinRouting,
-                                 RoutingPolicy, get_routing_policy,
-                                 list_routing_policies,
+from repro.serve.routing import (DeadlineRouting, KindAffinityRouting,
+                                 LeastLoadedRouting, ROUTING_POLICIES,
+                                 RoundRobinRouting, RoutingPolicy,
+                                 get_routing_policy, list_routing_policies,
                                  register_routing_policy)
 
 __all__ = [
-    "KindAffinityRouting", "LeastLoadedRouting", "ROUTING_POLICIES",
+    "DeadlineRouting", "KindAffinityRouting", "LeastLoadedRouting",
+    "ROUTING_POLICIES",
     "Replica", "ReplicaLoad", "RoundRobinRouting", "RoutedRecord",
     "Router", "RouterResult", "RouterStats", "RoutingPolicy",
     "get_routing_policy", "list_routing_policies",

@@ -53,6 +53,8 @@ class _Request:
     kind: Tuple[int, ...]       # bucket_shape ceilings (the shape family)
     t_route: float              # when the router pulled it from the stream
     stolen: bool = False
+    deadline: float | None = None   # absolute (router clock); travels with
+                                    # the request across steals
 
 
 @dataclasses.dataclass
@@ -96,6 +98,26 @@ class RoutedRecord:
         """Time resident in a bucket slot, seconds."""
         return self.record.service_s
 
+    @property
+    def status(self) -> str:
+        """``"completed"`` or ``"evicted"`` (the replica-local record's
+        status -- evicted requests carry partial beliefs)."""
+        return self.record.status
+
+    @property
+    def evicted(self) -> bool:
+        """True when the replica's admission policy gave up on this
+        request (deadline eviction); the result is partial."""
+        return self.record.evicted
+
+    @property
+    def within_slo(self) -> bool:
+        """Completed within its latency budget (vacuously true without
+        one). Delegates to the replica-local record: the budget the
+        replica received already had routing + inbox wait charged against
+        it, so this is the tier-level SLO verdict."""
+        return self.record.within_slo
+
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaLoad:
@@ -111,6 +133,7 @@ class ReplicaLoad:
     staged: int
     in_flight: int
     effort: float
+    urgent: int = 0             # deadlined requests queued in the inbox
 
     @property
     def depth(self) -> int:
@@ -154,6 +177,12 @@ class _Inbox:
         """The queued requests' bucket-shape kinds (snapshot)."""
         with self._cond:
             return [r.kind for r in self._items]
+
+    def snapshot(self) -> "List[Tuple[Tuple[int, ...], float | None]]":
+        """(kind, absolute deadline) per queued request -- what load
+        introspection reads (deadline = None for un-SLO'd requests)."""
+        with self._cond:
+            return [(r.kind, r.deadline) for r in self._items]
 
     def put(self, req: _Request, *, force: bool = False) -> None:
         with self._cond:
@@ -245,9 +274,10 @@ class Replica:
             if not admission_kwargs:
                 admission_kwargs = dict(
                     getattr(engine.config, "admission_kwargs", ()))
-        if history is not None and admission == "residual":
-            # Pool effort calibration tier-wide: every replica's residual
-            # policy reads/writes one shared (internally locked) history.
+        if history is not None and admission in ("residual", "deadline"):
+            # Pool effort calibration tier-wide: every replica's effort-
+            # aware policy reads/writes one shared (internally locked)
+            # history.
             admission_kwargs.setdefault("history", history)
         self.index = index
         self.low_watermark = max(0, low_watermark)
@@ -323,22 +353,25 @@ class Replica:
 
     def load(self) -> ReplicaLoad:
         """A :class:`ReplicaLoad` snapshot for routing decisions. Effort
-        weights each inbox request by the shared history's mean observed
-        rounds for its kind (unobserved kinds assume the mean of the
-        observed ones, or 1.0 cold); staged/in-flight requests weigh the
-        same fallback since their kinds are already device-committed."""
-        kinds = self._inbox.kinds()
-        raw = [None if self._history is None
-               else self._history.mean(("routed", k)) for k in kinds]
-        known = [e for e in raw if e is not None]
-        fallback = sum(known) / len(known) if known else 1.0
-        est = [fallback if e is None else e for e in raw]
+        weights each inbox request by the shared history's expected rounds
+        for its kind (``RoundsHistory.mean`` falls back kind -> global ->
+        1.0 cold, so unobserved kinds assume the tier-wide average);
+        staged/in-flight requests weigh the global fallback since their
+        kinds are already device-committed. ``urgent`` counts deadlined
+        inbox requests -- the deadline routing policy's signal."""
+        snap = self._inbox.snapshot()
+        fallback = 1.0 if self._history is None \
+            else self._history.mean(None, default=1.0)
+        est = [fallback if self._history is None
+               else self._history.mean(("routed", k), default=fallback)
+               for k, _ in snap]
         staged = self._staged()
         stats = self.pipeline.stats
         in_flight = max(0, int(stats.staged) - int(stats.evacuated) - staged)
         effort = sum(est) + (staged + in_flight) * fallback
-        return ReplicaLoad(replica=self.index, inbox=len(kinds),
-                           staged=staged, in_flight=in_flight, effort=effort)
+        return ReplicaLoad(replica=self.index, inbox=len(snap),
+                           staged=staged, in_flight=in_flight, effort=effort,
+                           urgent=sum(1 for _, d in snap if d is not None))
 
     # -- the serving thread ------------------------------------------------
 
@@ -385,14 +418,25 @@ class Replica:
             if got is _EMPTY:
                 continue
             self._meta[got.rid] = got
-            yield got.rid, got.pgm
+            if got.deadline is None:
+                yield got.rid, got.pgm, None
+            else:
+                # Absolute router-clock deadline back to a *remaining*
+                # budget relative to the replica-local enqueue the pipeline
+                # stamps (same clock tier-wide), so inbox wait counts
+                # against the SLO.
+                yield (got.rid, got.pgm,
+                       max(got.deadline - self.pipeline.clock(), 0.0))
 
     def _run(self) -> None:
         err: BaseException | None = None
         try:
             for rec in self.pipeline.serve(self._source()):
                 req = self._meta.pop(rec.rid)
-                if self._history is not None:
+                if self._history is not None and not rec.evicted:
+                    # Evicted round counts are truncation artifacts, not
+                    # effort samples -- feeding them in would teach the
+                    # predictor that hard requests are cheap.
                     self._history.observe(("routed", req.kind), 0.0,
                                           float(rec.result.rounds))
                 self.served += 1

@@ -34,6 +34,7 @@ surface.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import queue as _queue
 import threading
 import time
@@ -103,20 +104,29 @@ class RouterResult:
 
     def latency_percentiles(
             self, qs: Sequence[float] = (50, 90, 99), *,
-            field: str = "latency") -> Dict[str, float]:
+            field: str = "latency",
+            status: "str | None" = None) -> Dict[str, float]:
         """Tier-level latency percentiles in ms, ``{"p50": ...}``, measured
         from ``t_route`` (router queue-in) so routing and inbox wait are
         included: ``"latency"`` (route -> result), ``"admission"``
-        (route -> bucket admit), or ``"service"`` (admit -> result)."""
+        (route -> bucket admit), or ``"service"`` (admit -> result).
+        ``status`` filters to ``"completed"`` or ``"evicted"`` records
+        (``None`` = all) -- deadline eviction makes raw percentiles lie
+        (an evicted straggler *shrinks* them), so SLA reporting should
+        pass ``status="completed"``. All-NaN when nothing matches."""
         attrs = {"latency": "latency_s", "admission": "queue_s",
                  "service": "service_s"}
         if field not in attrs:
             raise KeyError(f"field must be one of {sorted(attrs)}, "
                            f"got {field!r}")
-        if not self.records:
+        if status not in (None, "completed", "evicted"):
+            raise ValueError("status must be None, 'completed', or "
+                             f"'evicted', got {status!r}")
+        recs = self.records if status is None else [
+            r for r in self.records if r.status == status]
+        if not recs:
             return {f"p{q:g}": float("nan") for q in qs}
-        lat = np.array([getattr(r, attrs[field])
-                        for r in self.records]) * 1e3
+        lat = np.array([getattr(r, attrs[field]) for r in recs]) * 1e3
         return {f"p{q:g}": float(np.percentile(lat, q)) for q in qs}
 
     @property
@@ -169,7 +179,8 @@ class Router:
                  routing_kwargs=None, steal: bool = False,
                  steal_batch: int = 4, low_watermark: int = 2,
                  inbox_capacity: int = 64, growth: float = 2.0,
-                 history: RoundsHistory | None = None, **replica_kwargs):
+                 history: RoundsHistory | None = None,
+                 clock=None, **replica_kwargs):
         if isinstance(engine, (list, tuple)):
             engines = list(engine)
             if not engines:
@@ -198,6 +209,17 @@ class Router:
         self.steal_batch = steal_batch
         self._policy = get_routing_policy(
             routing, **dict(routing_kwargs or {})).bind(self)
+        # Deadline-aware policies take an extra slo kwarg; inspect once so
+        # the tier keeps working with legacy 3-arg pick signatures.
+        params = inspect.signature(self._policy.pick).parameters
+        self._pick_slo = "slo" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+        self.clock = clock if clock is not None else time.perf_counter
+        if clock is not None:
+            # One time source tier-wide: replica pipelines stamp
+            # enqueue/admit/done on the router's clock, so absolute
+            # deadlines compare across the thread boundary.
+            replica_kwargs.setdefault("clock", clock)
         self._history = history if history is not None else RoundsHistory()
         self._out: _queue.Queue = _queue.Queue()
         self._steal_lock = threading.Lock()
@@ -251,9 +273,13 @@ class Router:
         """Dispatch ``stream`` across the replicas, yielding one
         :class:`~repro.serve.replica.RoutedRecord` per request in
         completion order. One-shot: a Router serves one stream. The stream
-        may yield ``PGM``\\ s (rid = arrival order) or explicit
-        ``(rid, PGM)`` pairs, exactly like ``serve_async``; replica
-        results interleave as they complete."""
+        may yield ``PGM``\\ s (rid = arrival order), explicit
+        ``(rid, PGM)`` pairs, or ``(rid, PGM, slo_s)`` deadline triples
+        (``rid=None`` keeps arrival-order rids), exactly like
+        ``serve_async``; replica results interleave as they complete.
+        An SLO is seconds from *router* queue-in: the absolute deadline
+        travels with the request (across steals too), and the replica
+        charges routing + inbox wait against the budget."""
         if self._started:
             raise ValueError("Router.serve is one-shot; build a fresh "
                              "Router per stream")
@@ -265,11 +291,19 @@ class Router:
         self._live = len(self.replicas)
         try:
             for item in iter(stream):
-                t = time.perf_counter()
+                t = self.clock()
+                slo = None
                 if isinstance(item, tuple):
-                    rid, pgm = item
-                    rid = int(rid)
-                    self._explicit_rids = True
+                    if len(item) == 3:
+                        rid, pgm, slo = item
+                        slo = None if slo is None else float(slo)
+                    else:
+                        rid, pgm = item
+                    if rid is None:
+                        rid = self._arrival
+                    else:
+                        rid = int(rid)
+                        self._explicit_rids = True
                 else:
                     rid, pgm = self._arrival, item
                 if self._explicit_rids:
@@ -279,13 +313,18 @@ class Router:
                     self._seen_rids.add(rid)
                 self._arrival += 1
                 kind = bucket_shape(pgm, self.growth)
-                i = self._policy.pick(rid, kind, self.loads())
+                if self._pick_slo:
+                    i = self._policy.pick(rid, kind, self.loads(), slo=slo)
+                else:
+                    i = self._policy.pick(rid, kind, self.loads())
                 if not 0 <= i < len(self.replicas):
                     raise ValueError(
                         f"routing policy picked replica {i}, have "
                         f"{len(self.replicas)}")
                 self.stats.routed[i] += 1
-                self.replicas[i].submit(_Request(rid, pgm, kind, t))
+                deadline = None if slo is None else t + slo
+                self.replicas[i].submit(
+                    _Request(rid, pgm, kind, t, deadline=deadline))
                 yield from self._drain(block=False)
             for r in self.replicas:
                 r.finish()

@@ -24,6 +24,12 @@ Built-ins:
   sees few distinct padded shapes (bucket shapes stay hot: fewer
   compiles, denser buckets); unseen kinds seed on the least-loaded
   replica.
+- ``deadline`` -- deadline-aware least-loaded: deadlined requests avoid
+  replicas already holding urgent work (``ReplicaLoad.urgent``), spreading
+  SLO pressure so one replica's backlog does not blow every deadline
+  queued behind it. Policies whose ``pick`` accepts an ``slo`` keyword
+  receive the request's latency budget; three-argument picks keep
+  working untouched.
 """
 
 from __future__ import annotations
@@ -33,7 +39,7 @@ from typing import Dict, List, Sequence, Tuple
 from repro.core.registry import Registry
 
 __all__ = ["ROUTING_POLICIES", "RoutingPolicy", "RoundRobinRouting",
-           "LeastLoadedRouting", "KindAffinityRouting",
+           "LeastLoadedRouting", "KindAffinityRouting", "DeadlineRouting",
            "get_routing_policy", "list_routing_policies",
            "register_routing_policy"]
 
@@ -146,6 +152,36 @@ class KindAffinityRouting(RoutingPolicy):
         return i
 
 
+class DeadlineRouting(RoutingPolicy):
+    """Deadline-aware least-loaded placement.
+
+    A request carrying an SLO (the router passes ``slo`` because this
+    ``pick`` declares the keyword) lands on the replica minimizing
+    effort-weighted depth *plus* an urgency penalty per deadlined request
+    already queued there (``ReplicaLoad.urgent``), so SLO pressure spreads
+    across the fleet instead of stacking behind one replica's backlog.
+    Requests without a deadline place plain least-loaded -- they can
+    afford to wait behind urgent work."""
+
+    name = "deadline"
+
+    def __init__(self, urgency_weight: float = 1.0):
+        super().__init__()
+        if urgency_weight < 0:
+            raise ValueError(
+                f"urgency_weight must be >= 0, got {urgency_weight}")
+        self.urgency_weight = urgency_weight
+
+    def pick(self, rid: int, kind: Tuple[int, ...],
+             loads: Sequence, slo: "float | None" = None) -> int:
+        if slo is None:
+            return self._least_loaded(loads)
+        return min(range(len(loads)),
+                   key=lambda i: (loads[i].weight
+                                  + self.urgency_weight * loads[i].urgent,
+                                  i))
+
+
 #: name -> RoutingPolicy class; names are the canonical serialized form
 #: (``Router(routing=...)``). A ``Registry`` (dict subclass): plain-dict
 #: reads keep working, unknown names raise the uniform registry KeyError.
@@ -153,6 +189,7 @@ ROUTING_POLICIES: Registry[type] = Registry("routing policy", {
     "round_robin": RoundRobinRouting,
     "least_loaded": LeastLoadedRouting,
     "kind_affinity": KindAffinityRouting,
+    "deadline": DeadlineRouting,
 })
 
 

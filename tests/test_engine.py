@@ -108,8 +108,8 @@ class TestConfigAndRegistry:
         assert "sharded" in list_backends()
         assert "pallas" in list_backends(batched=True)
         assert "fifo" in list_admission_policies()
-        assert list_routing_policies() == ["kind_affinity", "least_loaded",
-                                          "round_robin"]
+        assert list_routing_policies() == ["deadline", "kind_affinity",
+                                          "least_loaded", "round_robin"]
         fmt = r"unknown [\w ]+ 'nope'; registered: \["
         for fn in (lambda: get_scheduler("nope"),
                    lambda: get_update_fn("nope"),

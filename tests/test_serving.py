@@ -407,7 +407,8 @@ class TestAdmissionPolicies:
         assert rep.stats.policy == "windowed"
 
     def test_rounds_history(self):
-        h = RoundsHistory(capacity=2)
+        # The legacy nearest-neighbor predictor, pinned exactly.
+        h = RoundsHistory(capacity=2, predictor="nearest")
         assert h.expect("k", 1.0) is None
         h.observe("k", 1.0, 100)
         h.observe("k", 5.0, 300)
@@ -418,6 +419,8 @@ class TestAdmissionPolicies:
         assert len(h) == 2
         with pytest.raises(ValueError):
             RoundsHistory(capacity=0)
+        with pytest.raises(ValueError):
+            RoundsHistory(predictor="magic")
 
 
 class TestThreadedIngestion:

@@ -85,7 +85,10 @@ def fused_update_t(logpsi_t: jax.Array,   # (S, S, E) [x_src, x_dst, e]
     """Returns (new_logm_t (S, E), residual (E,)). Edges are padded to the
     block size internally (padded lanes carry all-masked states -> inert)."""
     s, e = pre_t.shape
-    blk = min(pick_block_edges(s), max(_LANE, e))
+    # Size blocks for the *actual* operand width: bf16 operands halve the
+    # per-edge working set, so the VMEM budget admits twice the edges.
+    blk = min(pick_block_edges(s, jnp.dtype(pre_t.dtype).itemsize),
+              max(_LANE, e))
     e_pad = ((e + blk - 1) // blk) * blk
     if e_pad != e:
         pad = [(0, 0)] * (len(logpsi_t.shape) - 1) + [(0, e_pad - e)]

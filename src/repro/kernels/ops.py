@@ -15,6 +15,14 @@ are folded into one (B*E,) edge axis so a single kernel launch -- one
 instead of B separate launches (or a vmap-added grid dimension with
 per-graph remainder waste). ``make_pallas_update_batch`` packages it as a
 ``batch_update_fn`` for ``repro.core.batch.run_bp_batch``.
+
+``triton_update`` / ``triton_update_batch`` are the GPU-class equivalents
+(``repro.kernels.triton_update``): same fused pipeline in the engine's
+native edge-major layout (zero boundary transposes), blocked over edges
+with states in registers, lowered through Pallas's Triton path on CUDA
+devices and through the interpreter everywhere else -- plus a
+``semiring="max"`` mode so MAP workloads run fused too. Registered as
+``"triton"`` in both registries; ``BPConfig(backend="triton")`` reaches it.
 """
 
 from __future__ import annotations
@@ -28,10 +36,21 @@ from repro.core import messages as M
 from repro.core.graph import PGM
 from repro.core.registry import Registry
 from repro.kernels.message_update import fused_update_t, pick_block_edges
+from repro.kernels.triton_update import fused_update_e
+
+__all__ = ["UPDATE_BACKENDS", "BATCH_UPDATE_BACKENDS", "kernel_operands_t",
+           "pallas_update", "make_pallas_update", "pallas_update_batch",
+           "make_pallas_update_batch", "triton_update", "make_triton_update",
+           "triton_update_batch", "make_triton_update_batch",
+           "register_update_backend", "list_backends", "get_update_fn"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _on_gpu() -> bool:
+    return jax.default_backend() == "gpu"
 
 
 def kernel_operands_t(pgm: PGM):
@@ -97,6 +116,73 @@ def make_pallas_update_batch(interpret: bool | None = None):
     return batch_update_fn
 
 
+# ------------------------------------------------- triton (GPU) backend --
+
+@functools.partial(jax.jit, static_argnames=("interpret", "semiring",
+                                             "blk_e"))
+def triton_update(pgm: PGM, logm: jax.Array, *, interpret: bool | None = None,
+                  semiring: str = "sum", blk_e: int | None = None):
+    """(cand (E,S), resid (E,)) -- GPU-kernel-backed ``ref_update`` (or, with
+    ``semiring="max"``, ``max_product_update``) equivalent. Edge-major all
+    the way: no layout transposes at the boundary."""
+    if interpret is None:
+        interpret = not _on_gpu()
+    pre = M.edge_prelude(pgm, logm)                          # (E, S)
+    dmask = pgm.state_mask[pgm.edge_dst]                     # (E, S)
+    return fused_update_e(pgm.log_psi_e, pre, logm, dmask,
+                          semiring=semiring, interpret=interpret,
+                          blk_e=blk_e)
+
+
+def make_triton_update(interpret: bool | None = None, *,
+                       semiring: str = "sum", blk_e: int | None = None):
+    """Static-arg-free closure for ``BPConfig(backend="triton")``: resolves
+    ``interpret`` once (Triton lowering on GPU, interpreter elsewhere) so
+    the returned callable is jit-cache-stable."""
+    if interpret is None:
+        interpret = not _on_gpu()
+
+    def update_fn(pgm: PGM, logm: jax.Array):
+        return triton_update(pgm, logm, interpret=interpret,
+                             semiring=semiring, blk_e=blk_e)
+
+    return update_fn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "semiring",
+                                             "blk_e"))
+def triton_update_batch(bpgm: PGM, logm: jax.Array, *,
+                        interpret: bool | None = None, semiring: str = "sum",
+                        blk_e: int | None = None):
+    """(cand (B,E,S), resid (B,E)) bucket path: the batch axis folds into
+    the kernel's edge grid (one launch of ceil(B*E / BLK_E) programs), same
+    fold as ``pallas_update_batch`` but with zero transposes."""
+    if interpret is None:
+        interpret = not _on_gpu()
+    b, e, s = logm.shape
+    pre = jax.vmap(M.edge_prelude)(bpgm, logm)                # (B, E, S)
+    dmask = jax.vmap(lambda p: p.state_mask[p.edge_dst])(bpgm)
+    new, resid = fused_update_e(
+        bpgm.log_psi_e.reshape(b * e, s, s), pre.reshape(b * e, s),
+        logm.reshape(b * e, s), dmask.reshape(b * e, s),
+        semiring=semiring, interpret=interpret, blk_e=blk_e)
+    return new.reshape(b, e, s), resid.reshape(b, e)
+
+
+def make_triton_update_batch(interpret: bool | None = None, *,
+                             semiring: str = "sum", blk_e: int | None = None):
+    """``batch_update_fn`` closure: whole-bucket fused edge-major update in
+    one kernel launch (the ``"triton"`` batched registry entry)."""
+    if interpret is None:
+        interpret = not _on_gpu()
+
+    def batch_update_fn(bpgm: PGM, logm: jax.Array):
+        return triton_update_batch(bpgm, logm, interpret=interpret,
+                                   semiring=semiring, blk_e=blk_e)
+
+    return batch_update_fn
+
+
 # ------------------------------------------------- backend registry ------
 # Message-update backends addressable by BPConfig.backend string. "ref" is
 # the pure-jnp oracle; "pallas" the fused kernel (interpret-mode off-TPU).
@@ -121,6 +207,10 @@ UPDATE_BACKENDS = Registry("update backend", {
     # with BPConfig(backend="maxprod") and map_assignment on the result.
     "maxprod": lambda: M.max_product_update,
     "pallas": make_pallas_update,
+    # GPU-class fused kernel (Pallas Triton lowering, edge-major blocks,
+    # states in registers; interpret-mode everywhere off-GPU so CPU CI
+    # exercises the same program). semiring="max" kwarg serves MAP.
+    "triton": make_triton_update,
     # Multi-device shard_map update over the edge axis (repro.dist). With
     # no kwargs a mesh over all devices is built at resolve time, so
     # BPConfig(backend="sharded") stays a serializable string. The edge
@@ -132,6 +222,7 @@ UPDATE_BACKENDS = Registry("update backend", {
 
 BATCH_UPDATE_BACKENDS = Registry("batched update backend", {
     "pallas": make_pallas_update_batch,
+    "triton": make_triton_update_batch,
 })
 
 

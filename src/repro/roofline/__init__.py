@@ -1,5 +1,10 @@
 from repro.roofline.analysis import (HW, RooflineReport, analyze_compiled,
                                      collective_bytes, model_flops)
+from repro.roofline.jaxpr_cost import Cost, jaxpr_cost, trace_cost
+from repro.roofline.kernel_model import (fused_update_cost, gpu_padded_shape,
+                                         predicted_intensity, round_cost)
 
 __all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes",
-           "model_flops"]
+           "model_flops", "Cost", "jaxpr_cost", "trace_cost",
+           "fused_update_cost", "gpu_padded_shape", "predicted_intensity",
+           "round_cost"]

@@ -121,6 +121,24 @@ def jaxpr_cost(jaxpr: core.Jaxpr, *, while_trips: float = 1.0) -> Cost:
             body = jaxpr_cost(eqn.params["body_jaxpr"].jaxpr,
                               while_trips=while_trips)
             total = total + body * while_trips
+        elif prim == "pallas_call":
+            # Fused-kernel contract: the kernel streams each outer operand
+            # and result through HBM exactly once (perfect fusion is the
+            # *definition* of a fused kernel, not an optimistic assumption
+            # here), so bytes = sum of the call's in/out avals -- e.g. the
+            # message-update kernel's 3-read/2-write model. Flops come from
+            # the kernel body jaxpr, once per grid step; the body's own
+            # byte counts (ref get/swap traffic) are on-chip and ignored.
+            inner = eqn.params["jaxpr"]
+            ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            body = jaxpr_cost(ij, while_trips=while_trips)
+            grid = eqn.params["grid_mapping"].grid
+            steps = float(np.prod([d for d in grid], dtype=np.float64)) \
+                if grid else 1.0
+            total.flops += body.flops * steps
+            total.bytes += sum(_nbytes(v.aval) for v in eqn.invars
+                               if hasattr(v, "aval")) \
+                + sum(_nbytes(o.aval) for o in eqn.outvars)
         elif prim == "cond":
             branches = [jaxpr_cost(b.jaxpr, while_trips=while_trips)
                         for b in eqn.params["branches"]]
@@ -133,6 +151,10 @@ def jaxpr_cost(jaxpr: core.Jaxpr, *, while_trips: float = 1.0) -> Cost:
             # any jaxpr-carrying primitive recurses
             ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
             total = total + jaxpr_cost(ij, while_trips=while_trips)
+        elif prim in ("get", "swap", "addupdate"):
+            # Pallas ref reads/writes: on-chip register/SMEM movement inside
+            # a kernel body; the HBM traffic is charged at the pallas_call.
+            pass
         elif prim in _REDUCE_PRIMS:
             total.flops += sum(_nelems(v.aval) for v in eqn.invars)
             total.bytes += sum(_nbytes(v.aval) for v in eqn.invars) \

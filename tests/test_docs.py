@@ -20,7 +20,9 @@ REPO = DOCS.parent
 
 PUBLIC_MODULES = ["repro.core", "repro.core.engine", "repro.core.serving",
                   "repro.core.batch", "repro.core.runner", "repro.dist",
-                  "repro.serve", "repro.pgm.datasets"]
+                  "repro.serve", "repro.pgm.datasets", "repro.kernels.ops",
+                  "repro.kernels.triton_update",
+                  "repro.roofline.kernel_model"]
 
 
 def _public_objects(modname):
@@ -54,7 +56,8 @@ def _code_blocks(md_path):
                                            ("admission.md", 3),
                                            ("schedulers.md", 2),
                                            ("router.md", 3),
-                                           ("workloads.md", 3)])
+                                           ("workloads.md", 3),
+                                           ("kernels.md", 3)])
 def test_md_code_blocks_execute(md, min_blocks):
     blocks = _code_blocks(DOCS / md)
     assert len(blocks) >= min_blocks, f"{md} lost its executable examples"
@@ -85,7 +88,7 @@ def test_md_code_blocks_execute(md, min_blocks):
                                 "docs/schedulers.md", "docs/engine.md",
                                 "docs/sharding.md", "docs/serving.md",
                                 "docs/admission.md", "docs/router.md",
-                                "docs/workloads.md"])
+                                "docs/workloads.md", "docs/kernels.md"])
 def test_relative_links_resolve(md):
     path = REPO / md
     broken = []

@@ -1,5 +1,8 @@
 """Roofline tooling: jaxpr flop/byte counter correctness on known
-workloads; HLO collective parser on synthetic and real HLO text."""
+workloads; HLO collective parser on synthetic and real HLO text; the
+fused-kernel 3-read/2-write cost-model pin (the autotune loop's contract
+-- if the kernel body or the walker drifts from the hand model, the
+block-size tuning silently optimizes the wrong target)."""
 
 import jax
 import jax.numpy as jnp
@@ -8,6 +11,8 @@ import pytest
 
 from repro.roofline.analysis import (HW, collective_bytes, model_flops)
 from repro.roofline.jaxpr_cost import Cost, trace_cost
+from repro.roofline.kernel_model import (fused_update_cost, gpu_padded_shape,
+                                         predicted_intensity, round_cost)
 
 
 class TestJaxprCounter:
@@ -65,6 +70,91 @@ class TestJaxprCounter:
         c1 = trace_cost(f, x, while_trips=1.0)
         c10 = trace_cost(f, x, while_trips=10.0)
         assert abs(c10.flops / c1.flops - 10.0) < 0.1
+
+
+def _kernel_operands(e, s, dtype=jnp.float32):
+    return (jax.ShapeDtypeStruct((e, s, s), dtype),
+            jax.ShapeDtypeStruct((e, s), dtype),
+            jax.ShapeDtypeStruct((e, s), dtype),
+            jax.ShapeDtypeStruct((e, s), jnp.bool_))
+
+
+class TestKernelCostModel:
+    """The roofline prediction pin: jaxpr-walk cost of one fused update
+    must match the hand-counted 3-read/2-write model. Shapes are chosen
+    pre-aligned (power-of-two states, block-multiple edges) so the model
+    and the launch agree exactly on bytes; flops get tolerance for the
+    O(S) tail, which depends on how jax traces broadcasts."""
+
+    @pytest.mark.parametrize("s,e,dtype", [(2, 1024, jnp.float32),
+                                           (4, 1024, jnp.float32),
+                                           (8, 512, jnp.float32),
+                                           (4, 1024, jnp.bfloat16)])
+    @pytest.mark.parametrize("semiring", ["sum", "max"])
+    def test_gpu_kernel_matches_model(self, s, e, dtype, semiring):
+        from repro.kernels.triton_update import fused_update_e
+        db = jnp.dtype(dtype).itemsize
+        e_pad, s_pad, _ = gpu_padded_shape(e, s, db)
+        assert (e_pad, s_pad) == (e, s)   # pre-aligned by construction
+        c = trace_cost(lambda *o: fused_update_e(
+            *o, semiring=semiring, interpret=True), *_kernel_operands(e, s, dtype))
+        model = fused_update_cost(e, s, dtype_bytes=db, semiring=semiring)
+        assert c.bytes == model.bytes     # 3 reads + 2 writes + mask, exact
+        assert abs(c.flops - model.flops) / model.flops < 0.25
+
+    def test_tpu_kernel_same_traffic_contract(self):
+        """The TPU-layout kernel streams the same operands (transposed), so
+        the same byte model holds; flops agree with the sum-semiring fit."""
+        from repro.kernels.message_update import fused_update_t
+        s, e = 4, 1024
+        ops = (jax.ShapeDtypeStruct((s, s, e), jnp.float32),
+               jax.ShapeDtypeStruct((s, e), jnp.float32),
+               jax.ShapeDtypeStruct((s, e), jnp.float32),
+               jax.ShapeDtypeStruct((s, e), jnp.bool_))
+        c = trace_cost(lambda *o: fused_update_t(*o, interpret=True), *ops)
+        model = fused_update_cost(e, s)
+        assert c.bytes == model.bytes
+        assert abs(c.flops - model.flops) / model.flops < 0.25
+
+    def test_pallas_flops_scale_with_grid(self):
+        """The pallas_call handler multiplies body flops by the grid size:
+        doubling the edge count (same block) must double the count."""
+        from repro.kernels.triton_update import fused_update_e
+        s = 4
+        f = lambda *o: fused_update_e(*o, interpret=True, blk_e=256)
+        c1 = trace_cost(f, *_kernel_operands(1024, s))
+        c2 = trace_cost(f, *_kernel_operands(2048, s))
+        assert abs(c2.flops / c1.flops - 2.0) < 1e-6
+        assert abs(c2.bytes / c1.bytes - 2.0) < 1e-6
+
+    def test_intensity_memory_bound_and_dtype_scaling(self):
+        """BP state counts sit far below the roofline ridge point, and
+        halving the operand width must raise intensity (same flops, fewer
+        bytes) -- the quantity the BLK_E autotune targets."""
+        hw = HW()
+        ridge = hw.peak_flops / hw.hbm_bw
+        for s in [2, 8, 96]:
+            i32 = predicted_intensity(s, dtype_bytes=4)
+            i16 = predicted_intensity(s, dtype_bytes=2)
+            assert 0.0 < i32 < ridge          # memory-bound everywhere
+            assert i16 > i32
+        assert predicted_intensity(2, semiring="max") < \
+            predicted_intensity(2, semiring="sum")
+
+    def test_round_cost_dominated_by_update(self):
+        """Per-scheduler round trace: the fused update is the hot spot, so
+        the round's bytes are within a small factor of the kernel's."""
+        from repro.core.schedulers import get_scheduler
+        from repro.kernels.ops import make_triton_update
+        from repro.pgm import ising_grid
+        pgm = ising_grid(8, 2.0, seed=0)
+        kernel = fused_update_cost(pgm.n_edges, pgm.n_states_max,
+                                   padded=True)
+        for name in ["lbp", "rbp", "rnbp"]:
+            c = round_cost(pgm, get_scheduler(name),
+                           make_triton_update(True))
+            assert c.flops >= kernel.flops and c.bytes >= kernel.bytes
+            assert c.bytes < 6.0 * kernel.bytes
 
 
 SYNTH_HLO = """
